@@ -1,0 +1,92 @@
+"""Paper Figure 2: ACDC vs dense linear layer speed across layer sizes.
+
+The paper benchmarks CUDA kernels on a Titan X.  Here we produce two views:
+
+1. CPU wall-clock of the jitted jnp implementations (directional only —
+   this container is not the target hardware);
+2. the ANALYTIC TPU-v5e roofline times for each implementation variant,
+   from the same byte/FLOP model the paper uses in section 5 (8N bytes/row
+   fused vs 24N multi-call; DCT-as-matmul FLOPs vs FFT FLOPs) — the
+   apples-to-apples replacement for the GPU plot.
+
+CSV: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acdc as A
+
+BATCH = 128
+SIZES = (128, 256, 512, 1024, 2048, 4096)
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def roofline_acdc_us(n: int, batch: int, fused: bool) -> float:
+    """Analytic TPU time for one ACDC layer application on a batch."""
+    bytes_per_row = 8 * n if fused else 24 * n      # paper section 5
+    flops_per_row = 4 * n + 2 * 2 * n * n / 1      # scale + 2 matmul-DCTs
+    # matmul-DCT: 2*N^2 MACs * 2 transforms; memory-bound check vs MXU
+    t_mem = batch * bytes_per_row / HBM_BW
+    t_flop = batch * (4 * n + 4 * n * n) / PEAK_FLOPS
+    return max(t_mem, t_flop) * 1e6
+
+
+def roofline_dense_us(n: int, batch: int) -> float:
+    t_mem = (4 * n * n + 8 * n * batch) / HBM_BW    # weight + io (fp32)
+    t_flop = 2 * n * n * batch / PEAK_FLOPS
+    return max(t_mem, t_flop) * 1e6
+
+
+def main(csv=True):
+    rows = []
+    for n in SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, n))
+        a = jnp.ones((n,))
+        d = jnp.ones((n,))
+        w = jax.random.normal(jax.random.PRNGKey(1), (n, n))
+
+        acdc_fft = jax.jit(lambda x, a, d: A.acdc(x, a, d, method="fft"))
+        acdc_mm = jax.jit(lambda x, a, d: A.acdc(x, a, d, method="matmul"))
+        dense = jax.jit(lambda x, w: x @ w)
+
+        t_fft = _time(acdc_fft, x, a, d)
+        t_mm = _time(acdc_mm, x, a, d)
+        t_dense = _time(dense, x, w)
+        rows.append((f"fig2_acdc_fft_n{n}", t_fft,
+                     f"cpu_speedup_vs_dense={t_dense / t_fft:.2f}x"))
+        rows.append((f"fig2_acdc_matmul_n{n}", t_mm,
+                     f"cpu_speedup_vs_dense={t_dense / t_mm:.2f}x"))
+        rows.append((f"fig2_dense_n{n}", t_dense, ""))
+        rows.append((f"fig2_tpu_roofline_acdc_fused_n{n}",
+                     roofline_acdc_us(n, BATCH, fused=True),
+                     f"tpu_speedup_vs_dense="
+                     f"{roofline_dense_us(n, BATCH)/roofline_acdc_us(n, BATCH, True):.1f}x"))
+        rows.append((f"fig2_tpu_roofline_dense_n{n}",
+                     roofline_dense_us(n, BATCH), ""))
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.2f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Table 1: parameter-count reductions from SELL replacement.
+
+Reproduces the CaffeNet bookkeeping analytically (the ImageNet training run
+is out of scope offline; the *counting* is exact) and extends the table to
+the assigned LM zoo — dense vs ACDC projections, per architecture.
+
+CSV: name,us_per_call,derived   (us_per_call column carries param counts)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.sell import SellConfig
+from repro.models import get_model
+
+
+def caffenet_rows():
+    """Paper's CaffeNet: fc6 (9216->4096), fc7 (4096->4096) replaced by 12
+    stacked ACDC layers at N=4608 with bias-on-D => 165,888 params."""
+    rows = []
+    fc6 = 9216 * 4096 + 4096
+    fc7 = 4096 * 4096 + 4096
+    dense_fc = fc6 + fc7
+    acdc = SellConfig(kind="acdc", n_in=4608, n_out=4608, k=12,
+                      bias=True).param_count()
+    rows.append(("table1_caffenet_fc_dense", dense_fc, "fc6+fc7"))
+    rows.append(("table1_caffenet_acdc12", acdc,
+                 f"paper_claims=165888 match={acdc == 165888}"))
+    # whole-model view (conv+fc8 unchanged, approx 6.45M)
+    rest = 58.7e6 - dense_fc
+    rows.append(("table1_caffenet_reduction",
+                 (rest + dense_fc) / (rest + acdc),
+                 "x-fold vs paper x6.0 (order-of-magnitude bookkeeping)"))
+    return rows
+
+
+def zoo_rows():
+    rows = []
+    for arch in registry.ARCHS:
+        cfg_d = registry.get_smoke_config(arch)
+        cfg_a = dataclasses.replace(cfg_d, sell_kind="acdc", sell_k=2)
+        pd = get_model(cfg_d).init(jax.random.PRNGKey(0), cfg_d)
+        pa = get_model(cfg_a).init(jax.random.PRNGKey(0), cfg_a)
+        nd = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pd))
+        na = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pa))
+        rows.append((f"table1_{arch}_dense_params", nd, "smoke config"))
+        rows.append((f"table1_{arch}_acdc_params", na,
+                     f"reduction={nd / na:.2f}x"))
+    return rows
+
+
+def full_config_projection_rows():
+    """Analytic projection-parameter counts at FULL config scale."""
+    rows = []
+    for arch in ("deepseek_67b", "llava_next_34b", "qwen3_1_7b"):
+        cfg = registry.get_config(arch)
+        d = cfg.d_model
+        h = cfg.n_heads * cfg.head_dim_
+        dense = h * d + 3 * d * cfg.d_ff          # attn_out + gated mlp
+        acdc_out = SellConfig(kind="acdc", n_in=h, n_out=d, k=2, bias=False,
+                              lane_multiple=128).param_count()
+        acdc_mlp = 3 * SellConfig(kind="acdc", n_in=d, n_out=cfg.d_ff, k=2,
+                                  bias=False, lane_multiple=128).param_count()
+        rows.append((f"table1_full_{arch}_proj_dense_per_layer", dense, ""))
+        rows.append((f"table1_full_{arch}_proj_acdc_per_layer",
+                     acdc_out + acdc_mlp,
+                     f"reduction={dense / (acdc_out + acdc_mlp):.0f}x"))
+    return rows
+
+
+def main(csv=True):
+    rows = caffenet_rows() + zoo_rows() + full_config_projection_rows()
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

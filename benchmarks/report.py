@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md tables from results/ JSON (dry-run + roofline).
+
+    PYTHONPATH=src python -m benchmarks.report dryrun
+    PYTHONPATH=src python -m benchmarks.report roofline
+"""
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "dryrun", "*.json"))):
+        d = json.load(open(f))
+        if d["status"] == "ok":
+            mem = d["memory"]
+            coll = d["collectives"]
+            kinds = ",".join(f"{k.split('-')[-1][:4]}:{v}"
+                             for k, v in coll["count"].items() if v)
+            rows.append((d["cell"], d["n_devices"],
+                         f"{mem.get('argument_size_in_bytes', 0)/2**30:.2f}",
+                         f"{mem.get('temp_size_in_bytes', 0)/2**30:.1f}",
+                         kinds, f"{d['compile_s']:.0f}s"))
+        elif d["status"] == "skipped":
+            rows.append((d["cell"], "—", "—", "—", "skip (sub-quadratic "
+                         "contract, DESIGN.md §4)", "—"))
+    out = ["| cell | devices | args GiB/dev | temp GiB/dev | collectives "
+           "(count, loop body printed once) | compile |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "roofline", "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            rows.append(r)
+    out = ["| cell | compute s | memory s (HLO ub) | collective s | dominant "
+           "| useful/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        sell = "" if r.get("sell", "dense") == "dense" else f" [{r['sell']}]"
+        out.append(
+            f"| {r['cell']}{sell} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| {r['dominant'].replace('_s', '')} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.2%} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    print({"dryrun": dryrun_table, "roofline": roofline_table}[which]())

@@ -1,0 +1,245 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s
+    memory_s     = HLO_bytes_per_device / 819 GB/s
+    collective_s = collective_bytes_per_device / 50 GB/s
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count, and the compiled HLO text prints each loop body once, so a naive
+read undercounts scanned-layer models by ~L x.  We correct with a
+two-point extrapolation taken from the compiled artifacts themselves:
+compile the model at L=l1 and L=2*l1 layers; anything linear in depth
+(layer flops, layer bytes, per-layer FSDP all-gathers) extrapolates as
+
+    metric(L) = metric(l1) + (L - l1)/l1 * (metric(2*l1) - metric(l1))
+
+which also isolates the depth-independent part (embedding, loss, final
+collectives).  MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*D
+(inference) with N = active params (MoE-aware).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--cell arch.shape] [--all]
+    PYTHONPATH=src python -m benchmarks.roofline --table   # markdown table
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "roofline")
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (MoE-aware).
+# ---------------------------------------------------------------------------
+
+def count_params(arch: str, active: bool = False) -> int:
+    import functools
+    import jax
+    from repro.configs import registry
+    from repro.models import get_model
+
+    cfg = registry.get_config(arch)
+    model = get_model(cfg)
+    abs_p = jax.eval_shape(functools.partial(model.init, cfg=cfg),
+                           jax.random.PRNGKey(0))
+    from repro.optim.optimizers import tree_paths
+    paths = tree_paths(abs_p)
+    total = 0
+    for path, leaf in zip(jax.tree.leaves(paths), jax.tree.leaves(abs_p)):
+        n = int(np.prod(leaf.shape))
+        if active and "experts/" in path and cfg.n_experts:
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global analytic FLOPs for one step of this cell."""
+    from repro.configs import registry
+    shape = registry.get_shape(shape_name)
+    n_active = count_params(arch, active=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# Two-point compiled extrapolation.
+# ---------------------------------------------------------------------------
+
+def _compile_metrics(arch, shape_name, n_layers, sell="dense",
+                     cfg_overrides=None):
+    import jax
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    # scan_unroll=True: XLA cost_analysis counts while bodies ONCE, so the
+    # small-L compiles must be unrolled for per-layer costs to be visible.
+    overrides = {"scan_unroll": True, **(cfg_overrides or {})}
+    fn, args, in_sh, out_sh = dryrun.build_cell(
+        arch, shape_name, mesh, sell=sell, n_layers=n_layers,
+        cfg_overrides=overrides)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    text = compiled.as_text()
+    coll = dryrun.collective_bytes(text)
+    # NOTE: compiled.cost_analysis() on the CPU backend omits dots inside
+    # fused/called computations — flops/bytes are parsed from the optimized
+    # HLO text instead (dryrun.hlo_text_analysis).
+    hlo = dryrun.hlo_text_analysis(text)
+    return {
+        "flops": float(hlo["flops"]),
+        "bytes": float(hlo["bytes"]),
+        "coll": float(coll["total_bytes"]),
+        "coll_by_kind": coll["bytes"],
+        "counts": coll["count"],
+        "mem_args": int(compiled.memory_analysis().argument_size_in_bytes),
+        "mem_temp": int(compiled.memory_analysis().temp_size_in_bytes),
+    }
+
+
+def extrapolated_metrics(arch: str, shape_name: str, sell="dense",
+                         cfg_overrides=None) -> dict:
+    from repro.configs import registry
+    cfg = registry.get_config(arch)
+    # l1=2 (not 1): single-layer compiles can take degenerate SPMD
+    # strategies (observed on llava: L=1 flops > L=2 flops); hybrids need
+    # a multiple of attn_every so every group is complete.
+    l1 = cfg.attn_every if cfg.family == "hybrid" else 2
+    l2 = 2 * l1
+    L = cfg.n_layers
+    m1 = _compile_metrics(arch, shape_name, l1, sell, cfg_overrides)
+    m2 = _compile_metrics(arch, shape_name, l2, sell, cfg_overrides)
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        # clamp: tiny decode programs can show negative slope from fusion
+        # noise between the two compiles
+        slope = max((m2[k] - m1[k]) / l1, 0.0)
+        out[k] = m1[k] + slope * (L - l1)
+        out[k + "_per_layer"] = slope
+        out[k + "_const"] = m1[k] - slope * l1
+    out["coll_by_kind_l2"] = m2["coll_by_kind"]
+    out["counts_l2"] = m2["counts"]
+    return out
+
+
+def analyze_cell(arch: str, shape_name: str, sell="dense",
+                 cfg_overrides=None, tag="") -> dict:
+    from repro.configs import registry
+    if registry.skips(arch, shape_name):
+        return {"cell": f"{arch}.{shape_name}", "status": "skipped"}
+    t0 = time.time()
+    m = extrapolated_metrics(arch, shape_name, sell, cfg_overrides)
+    mf_global = model_flops(arch, shape_name)
+    n_chips = 256
+    compute_s = m["flops"] / PEAK_FLOPS
+    memory_s = m["bytes"] / HBM_BW
+    coll_s = m["coll"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    rec = {
+        "cell": f"{arch}.{shape_name}" + (f".{tag}" if tag else ""),
+        "status": "ok",
+        "sell": sell,
+        "mesh": "pod16x16",
+        "hlo_flops_per_device": m["flops"],
+        "hlo_bytes_per_device": m["bytes"],
+        "collective_bytes_per_device": m["coll"],
+        "collective_kinds": m["coll_by_kind_l2"],
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": mf_global,
+        "model_flops_per_device": mf_global / n_chips,
+        "useful_flops_ratio": (mf_global / n_chips) / max(m["flops"], 1.0),
+        "roofline_fraction": (mf_global / n_chips / PEAK_FLOPS) / bound_s
+            if bound_s > 0 else 0.0,
+        "analyze_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = rec["cell"] + ("" if sell == "dense" else f".{sell}")
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def render_table() -> str:
+    rows = []
+    for fname in sorted(os.listdir(RESULTS_DIR)):
+        with open(os.path.join(RESULTS_DIR, fname)) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+    lines = [
+        "| cell | compute s | memory s | collective s | dominant | "
+        "useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['cell']}{'.' + r['sell'] if r['sell'] != 'dense' else ''} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant'].replace('_s','')} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2%} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, help="arch.shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sell", default="dense")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        print(render_table())
+        return
+    from repro.configs import registry
+    cells = registry.cells() if args.all else [tuple(args.cell.split("."))]
+    for arch, shape in cells:
+        name = f"{arch}.{shape}" + ("" if args.sell == "dense"
+                                    else f".{args.sell}")
+        path = os.path.join(RESULTS_DIR, name + ".json")
+        if args.all and os.path.exists(path):
+            print(f"[cached] {name}")
+            continue
+        rec = analyze_cell(arch, shape, args.sell)
+        if rec.get("status") != "ok":
+            print(f"[{rec.get('status')}] {name}")
+            continue
+        print(f"[ok] {name} dominant={rec['dominant']} "
+              f"cmp={rec['compute_s']:.2e} mem={rec['memory_s']:.2e} "
+              f"col={rec['collective_s']:.2e} "
+              f"frac={rec['roofline_fraction']:.1%} ({rec['analyze_s']}s)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

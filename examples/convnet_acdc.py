@@ -1,0 +1,137 @@
+"""Paper section 6.2 mechanism, offline proxy: replace the FC layers of a
+small convnet with a 12-layer ACDC+ReLU+permutation stack and train on a
+synthetic image-classification task.
+
+CaffeNet/ImageNet itself is out of scope in an offline container; this
+driver reproduces every *mechanism* of the paper's experiment: the 12-deep
+SELL stack, identity+noise init, bias-on-D, lr multipliers (x24 A, x12 D),
+no weight decay on the diagonals, and the parameter bookkeeping.
+
+    PYTHONPATH=src python examples/convnet_acdc.py [--fc dense|acdc] \
+        [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acdc as A
+from repro.optim import OptimizerConfig, make_optimizer, step_decay_schedule
+from repro.optim.optimizers import tree_add
+
+N_CLASSES = 10
+IMG = 16
+N_FEAT = 1152   # 8x 12x12 after conv+pool... computed below
+
+
+def synth_images(rng, n, n_classes=N_CLASSES):
+    """Class-conditional Gabor-ish patterns + noise: linearly separable
+    enough to train, hard enough to need the features."""
+    keys = jax.random.split(rng, 3)
+    labels = jax.random.randint(keys[0], (n,), 0, n_classes)
+    xx, yy = jnp.meshgrid(jnp.arange(IMG), jnp.arange(IMG))
+    freqs = (1 + jnp.arange(n_classes, dtype=jnp.float32)) / n_classes
+    base = jnp.sin(freqs[:, None, None] * (xx + 2 * yy)[None] * 0.8)
+    x = base[labels] + 0.3 * jax.random.normal(keys[1], (n, IMG, IMG))
+    return x[..., None], labels
+
+
+def init_model(rng, fc_kind="acdc", k=12):
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    p = {
+        "conv1": 0.1 * jax.random.normal(r1, (3, 3, 1, 8)),
+        "conv2": 0.1 * jax.random.normal(r2, (3, 3, 8, 8)),
+    }
+    n_feat = 8 * (IMG // 2) * (IMG // 2)  # 512
+    if fc_kind == "dense":
+        p["fc1"] = {"w": 0.05 * jax.random.normal(r3, (n_feat, n_feat)),
+                    "b": jnp.zeros((n_feat,))}
+    else:
+        cfg = A.ACDCConfig(n=n_feat, k=k, relu=True, permute=True, bias=True,
+                           init_mean=1.0, init_std=0.061)  # paper's init
+        p["sell"] = A.init_acdc_params(r3, cfg)
+        p["_cfg"] = None  # placeholder, cfg is static
+    p["out"] = {"w": 0.05 * jax.random.normal(r4, (n_feat, N_CLASSES)),
+                "b": jnp.zeros((N_CLASSES,))}
+    return p, n_feat
+
+
+def forward(p, x, fc_kind, cfg):
+    h = jax.lax.conv_general_dilated(
+        x, p["conv1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = jax.lax.conv_general_dilated(
+        h, p["conv2"], (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(h)
+    h = h.reshape(h.shape[0], -1)
+    h = h * 0.1  # paper: scale features into the SELL by 0.1
+    if fc_kind == "dense":
+        h = jax.nn.relu(h @ p["fc1"]["w"] + p["fc1"]["b"])
+    else:
+        h = jax.nn.relu(A.acdc_cascade(p["sell"], h, cfg))
+    return h @ p["out"]["w"] + p["out"]["b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fc", default="acdc", choices=["acdc", "dense"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=12)
+    args = ap.parse_args()
+
+    rng = jax.random.PRNGKey(0)
+    p, n_feat = init_model(rng, args.fc, args.k)
+    p.pop("_cfg", None)
+    cfg = A.ACDCConfig(n=n_feat, k=args.k, relu=True, permute=True,
+                       bias=True, init_std=0.061)
+
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+    fc_params = (n_feat * n_feat + n_feat if args.fc == "dense"
+                 else cfg.param_count())
+    print(f"fc={args.fc}: total params {n_params:,} "
+          f"(fc block: {fc_params:,})")
+
+    # paper's optimizer: SGD momentum 0.65, step decay, lr mults x24/x12
+    groups = ((r"sell/a$", {"lr_mult": 24.0, "weight_decay": 0.0}),
+              (r"sell/d$", {"lr_mult": 12.0, "weight_decay": 0.0}),
+              (r"sell/bias$", {"weight_decay": 0.0}))
+    opt = make_optimizer(
+        OptimizerConfig(kind="sgd", lr=1.0, momentum=0.65,
+                        weight_decay=5e-4, grad_clip=1.0, groups=groups),
+        step_decay_schedule(1e-3, 0.1, max(args.steps // 2, 1)))
+    opt_state = opt.init(p)
+
+    def loss_fn(p, x, y):
+        logits = forward(p, x, args.fc, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1)), logits
+
+    @jax.jit
+    def step(p, opt_state, i, rng):
+        x, y = synth_images(rng, args.batch)
+        (l, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        u, opt_state = opt.update(g, opt_state, p, i)
+        return tree_add(p, u), opt_state, l, acc
+
+    t0 = time.time()
+    for i in range(args.steps):
+        p, opt_state, l, acc = step(p, opt_state, jnp.asarray(i),
+                                    jax.random.fold_in(rng, i))
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(l):.4f} acc {float(acc):.3f} "
+                  f"({time.time()-t0:.0f}s)")
+    xe, ye = synth_images(jax.random.PRNGKey(123), 512)
+    logits = forward(p, xe, args.fc, cfg)
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == ye).astype(jnp.float32)))
+    print(f"eval acc: {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + decode with KV cache on any arch.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1_3b --smoke
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "qwen3_1_7b", "--smoke",
+                            "--batch", "4", "--prompt-len", "16",
+                            "--gen", "24"]
+    serve_mod.main(argv)

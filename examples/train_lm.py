@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps,
+dense vs ACDC projections, on the synthetic Markov-Zipf stream.
+
+    PYTHONPATH=src python examples/train_lm.py --sell acdc --steps 200
+
+This is the deliverable-(b) end-to-end example: real config, sharded state
+(host mesh), checkpointing, straggler monitor — the same launcher code the
+cluster run uses, exercised at ~100M scale on CPU.
+"""
+
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sell", default="dense", choices=["dense", "acdc",
+                                                        "fastfood",
+                                                        "circulant",
+                                                        "low_rank"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # qwen3_1_7b smoke is tiny; build a ~100M variant instead: the full
+    # qwen3 architecture at reduced depth/width via CLI overrides.
+    import dataclasses
+    from repro.configs import registry
+
+    cfg = dataclasses.replace(
+        registry.get_config("qwen3_1_7b"),
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=32000, dtype="float32",
+    )
+
+    # ~100M check
+    import jax
+    import numpy as np
+    from repro.models import get_model
+    probe = jax.eval_shape(
+        lambda r: get_model(cfg).init(r, cfg), jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(probe))
+    print(f"model: {n/1e6:.1f}M params ({args.sell} projections)")
+
+    # monkey-patch the launcher's config resolution to use our ~100M cfg
+    orig = registry.get_smoke_config
+    registry.get_smoke_config = lambda a: cfg
+    try:
+        train_mod.main([
+            "--arch", "qwen3_1_7b", "--smoke",
+            "--sell", args.sell,
+            "--steps", str(args.steps),
+            "--seq-len", str(args.seq_len),
+            "--global-batch", str(args.global_batch),
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "10",
+        ])
+    finally:
+        registry.get_smoke_config = orig
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Assigned architecture configs (one module per arch) + registry."""
+
+from repro.configs.registry import ARCHS, SHAPES, get_config, get_smoke_config, input_specs  # noqa: F401

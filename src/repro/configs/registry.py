@@ -1,0 +1,135 @@
+"""Architecture registry + (arch x shape) dry-run cell definitions.
+
+Ten assigned architectures, each with the four LM shape cells:
+
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  global_batch 32    (prefill forward)
+    decode_32k   cache 32768, global_batch 128  (serve_step, 1 new token)
+    long_500k    cache 524288, global_batch 1   (serve_step; sub-quadratic
+                                                 archs only, see skips())
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input of the step being lowered — no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCHS: Tuple[str, ...] = (
+    "deepseek_67b",
+    "chatglm3_6b",
+    "gemma3_27b",
+    "qwen3_1_7b",
+    "seamless_m4t_large_v2",
+    "mamba2_1_3b",
+    "moonshot_v1_16b_a3b",
+    "deepseek_moe_16b",
+    "zamba2_1_2b",
+    "llava_next_34b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+# archs whose attention is sub-quadratic (SSM / hybrid / 5:1 sliding
+# window) run long_500k; pure full-attention archs skip it (DESIGN.md §4).
+LONG_CONTEXT_OK = {"mamba2_1_3b", "zamba2_1_2b", "gemma3_27b"}
+
+
+def get_shape(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def skips(arch: str, shape: str) -> Optional[str]:
+    """Reason string if this (arch, shape) cell is skipped, else None."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return ("pure full-attention config: 524k-token quadratic attention "
+                "is out of contract; run on SSM/hybrid/sliding-window archs")
+    return None
+
+
+def cells(include_skipped: bool = False):
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            if include_skipped or skips(a, s.name) is None:
+                out.append((a, s.name))
+    return out
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for the dry-run.
+# ---------------------------------------------------------------------------
+
+def _frontend_tokens(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend == "audio":
+        return max(seq_len // 4, 8)      # ~4x temporal downsampling stub
+    if cfg.frontend == "vision":
+        return cfg.n_frontend_tokens or 576
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict:
+    """Inputs for the step kind of this cell.
+
+    train   -> {"batch": {tokens, labels[, frontend_embeds]}}
+    prefill -> {"tokens" [, "frontend_embeds"]}
+    decode  -> {"tokens", "position"} (cache specs come from init_cache)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f = _frontend_tokens(cfg, s)
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if f:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, f, cfg.d_model), jnp.float32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if f:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, f, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "position": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,20 @@
+"""Core contribution of the paper: the ACDC structured efficient linear
+layer, its deep cascades, and the SELL baseline zoo it is compared to.
+
+NOTE: the single-layer function ``repro.core.acdc.acdc`` is intentionally
+NOT re-exported at package level — it would shadow the ``acdc`` submodule.
+"""
+
+from repro.core.acdc import (  # noqa: F401
+    ACDCConfig,
+    acdc_cascade,
+    acdc_cascade_dense_equivalent,
+    acdc_rectangular,
+    init_acdc_params,
+)
+from repro.core.sell import (  # noqa: F401
+    SellConfig,
+    init_sell_params,
+    sell_dense_equivalent,
+    structured_linear,
+)

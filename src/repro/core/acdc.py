@@ -1,0 +1,202 @@
+"""The ACDC structured efficient linear layer (paper sections 3-4).
+
+A single ACDC layer computes (row-vector convention, as in the paper)::
+
+    y = x . A . C . D . C^-1
+
+with ``A = diag(a)``, ``D = diag(d)`` learned real diagonals and ``C`` the
+orthonormal DCT-II.  O(N) parameters, O(N log N) FLOPs.
+
+This module provides:
+
+* ``acdc`` — one layer, selectable transform backend (FFT / matmul / Pallas).
+* ``init_acdc_params`` / ``acdc_cascade`` — the order-K deep SELL
+  (Definition 1) with the paper's identity+noise initialization, optional
+  interleaved ReLU non-linearities, riffle permutations and bias-on-D
+  (the CaffeNet configuration of section 6.2).
+* ``acdc_rectangular`` — pad/truncate wrapper for ``N_in != N_out`` layers
+  (Deep-Fried-Convnets-style), used when ACDC replaces rectangular
+  projections inside the model zoo.
+
+Parameters are plain pytrees (dicts of arrays) so they can be stacked for
+``jax.lax.scan`` and sharded with pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transforms
+
+Method = Literal["auto", "fft", "matmul", "pallas"]
+
+# N at or below which the explicit-matrix (MXU) path is preferred on TPU.
+# Above it the FFT path wins on FLOPs; the Pallas kernel handles the fused
+# matmul path explicitly.  On CPU (tests) "auto" resolves to fft for large N.
+_MATMUL_MAX_N = 4096
+
+
+# ---------------------------------------------------------------------------
+# Single layer.
+# ---------------------------------------------------------------------------
+
+def _resolve_method(n: int, method: Method) -> str:
+    if method != "auto":
+        return method
+    return "matmul" if n <= _MATMUL_MAX_N else "fft"
+
+
+def acdc(
+    x: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    method: Method = "auto",
+) -> jax.Array:
+    """One ACDC layer along the last axis of ``x``.
+
+    ``bias`` (if given) is the paper's bias-on-D: added after the ``D``
+    scaling, in the transform domain, before the inverse DCT.
+    """
+    n = x.shape[-1]
+    if a.shape[-1] != n or d.shape[-1] != n:
+        raise ValueError(f"diagonal size mismatch: x={n} a={a.shape} d={d.shape}")
+    # keep the activation dtype: fp32 master diagonals are cast down so a
+    # bf16 residual stream stays bf16 through the cascade (scan carries).
+    a = a.astype(x.dtype)
+    d = d.astype(x.dtype)
+    bias = bias.astype(x.dtype) if bias is not None else None
+    m = _resolve_method(n, method)
+    if m == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.acdc_fused_op(x, a, d, bias)
+    h1 = x * a
+    if m == "matmul":
+        h2 = transforms.dct_via_matmul(h1)
+    else:
+        h2 = transforms.dct(h1)
+    h3 = h2 * d
+    if bias is not None:
+        h3 = h3 + bias
+    if m == "matmul":
+        y = transforms.idct_via_matmul(h3)
+    else:
+        y = transforms.idct(h3)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Cascade (order-K deep SELL).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ACDCConfig:
+    """Configuration of an order-K ACDC cascade."""
+
+    n: int                       # feature size
+    k: int = 1                   # number of stacked ACDC layers
+    relu: bool = False           # interleave ReLU between layers (not after last)
+    permute: bool = False        # riffle-permute between layers for incoherence
+    bias: bool = True            # bias-on-D (paper section 6.2)
+    init_mean: float = 1.0       # paper: N(1, sigma^2) "identity + noise"
+    init_std: float = 0.061      # paper section 6.2 value
+    first_a_identity: bool = False  # Definition 1 convention A_1 = I
+    method: Method = "auto"
+
+    def param_count(self) -> int:
+        per = 2 * self.n + (self.n if self.bias else 0)
+        return per * self.k
+
+
+def init_acdc_params(rng: jax.Array, cfg: ACDCConfig, dtype=jnp.float32) -> dict:
+    """Stacked cascade parameters: each leaf has leading dim ``k``.
+
+    Initialization follows the paper: diagonals ~ N(init_mean, init_std^2)
+    (identity + symmetry-breaking noise); biases start at zero.
+    """
+    ra, rd = jax.random.split(rng)
+    a = cfg.init_mean + cfg.init_std * jax.random.normal(ra, (cfg.k, cfg.n), dtype)
+    d = cfg.init_mean + cfg.init_std * jax.random.normal(rd, (cfg.k, cfg.n), dtype)
+    if cfg.first_a_identity:
+        a = a.at[0].set(jnp.ones((cfg.n,), dtype))
+    params = {"a": a, "d": d}
+    if cfg.bias:
+        params["bias"] = jnp.zeros((cfg.k, cfg.n), dtype)
+    return params
+
+
+def acdc_cascade(params: dict, x: jax.Array, cfg: ACDCConfig) -> jax.Array:
+    """Apply the order-K cascade with optional ReLU + riffle interleaving.
+
+    Uses ``lax.scan`` over the stacked layer parameters so the compiled
+    program is O(1) in K.
+    """
+    n = cfg.n
+    perm = jnp.asarray(transforms.make_riffle(n)) if cfg.permute else None
+
+    if cfg.k == 1:
+        layer0 = jax.tree.map(lambda p: p[0], params)
+        return acdc(x, layer0["a"], layer0["d"], layer0.get("bias"), method=cfg.method)
+
+    # Interleavings (ReLU / permutation) apply BETWEEN layers, not after the
+    # last one, matching the paper's CaffeNet stack.
+    def scan_body(h, layer):
+        y = acdc(h, layer["a"], layer["d"], layer.get("bias"), method=cfg.method)
+        if cfg.relu:
+            y = jax.nn.relu(y)
+        if perm is not None:
+            y = y[..., perm]
+        return y, None
+
+    # all but last through scan with interleaving; final layer plain.
+    head = jax.tree.map(lambda p: p[:-1], params)
+    last = jax.tree.map(lambda p: p[-1], params)
+    h, _ = jax.lax.scan(scan_body, x, head)
+    return acdc(h, last["a"], last["d"], last.get("bias"), method=cfg.method)
+
+
+def acdc_cascade_dense_equivalent(params: dict, cfg: ACDCConfig) -> jax.Array:
+    """Materialize the cascade as an explicit N x N matrix (test oracle).
+
+    Only valid for linear cascades (no ReLU).
+    """
+    if cfg.relu:
+        raise ValueError("dense equivalent undefined with interleaved ReLU")
+    eye = jnp.eye(cfg.n, dtype=jnp.float32)
+    # Push the identity through the cascade: rows transform independently.
+    return acdc_cascade(jax.tree.map(lambda p: p.astype(jnp.float32), params), eye, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Rectangular wrapper (Deep-Fried style pad/truncate).
+# ---------------------------------------------------------------------------
+
+def rectangular_size(n_in: int, n_out: int, multiple: int = 1) -> int:
+    """Operating size for a rectangular ACDC: max(in, out) padded to a lane
+    multiple (MXU alignment — see DESIGN.md section 3)."""
+    n = max(n_in, n_out)
+    return int(np.ceil(n / multiple) * multiple)
+
+
+def acdc_rectangular(
+    params: dict,
+    x: jax.Array,
+    cfg: ACDCConfig,
+    n_in: int,
+    n_out: int,
+) -> jax.Array:
+    """Apply a cascade as an ``n_in -> n_out`` map via zero-pad / truncate."""
+    if x.shape[-1] != n_in:
+        raise ValueError(f"expected last dim {n_in}, got {x.shape}")
+    pad = cfg.n - n_in
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    y = acdc_cascade(params, x, cfg)
+    return y[..., :n_out]

@@ -1,0 +1,230 @@
+"""Structured Efficient Linear Layer (SELL) zoo.
+
+The paper positions ACDC inside a family of SELLs (its eq. 2 notation
+``Phi(D, P, S, B)``).  To make the comparisons of Table 1 / Figure 4
+reproducible end-to-end, every baseline the paper discusses is implemented
+here behind one dispatch point, :func:`structured_linear`:
+
+* ``dense``          — ordinary ``y = x W (+ b)``.
+* ``low_rank``       — ``y = x U V`` with rank r (Sainath et al. 2013).
+* ``circulant``      — adaptive variant of Cheng et al. 2015,
+                       ``y = x diag(a) R`` with R circulant (learned first
+                       column), computed via rFFT.
+* ``fastfood``       — Adaptive Fastfood (Yang et al. 2015),
+                       ``Phi = D1 H P D2 H D3`` with learned diagonals.
+* ``acdc``           — the paper's layer (order-K cascade), see
+                       :mod:`repro.core.acdc`.
+* ``afdf``           — the complex variant of section 3 (theory oracle).
+
+All follow the row-vector convention ``y = x @ Phi`` on the last axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acdc as acdc_mod
+from repro.core import transforms
+
+SellKind = Literal["dense", "low_rank", "circulant", "fastfood", "acdc", "afdf"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SellConfig:
+    """Config for one structured linear ``n_in -> n_out``."""
+
+    kind: SellKind = "dense"
+    n_in: int = 0
+    n_out: int = 0
+    # acdc / afdf
+    k: int = 1
+    relu: bool = False
+    permute: bool = False
+    bias: bool = True
+    init_std: float = 0.061
+    method: acdc_mod.Method = "auto"
+    # low-rank
+    rank: int = 0
+    # dense init
+    dense_init_scale: float = 1.0
+    # MXU lane alignment for the transform size; 1 = exact (paper-faithful
+    # small experiments), 128 = TPU-aligned (model zoo).
+    lane_multiple: int = 1
+
+    @property
+    def n_op(self) -> int:
+        """Internal (padded square) operating size for transform SELLs."""
+        if self.kind == "fastfood":
+            # Hadamard needs a power of two.
+            n = max(self.n_in, self.n_out)
+            return 1 << int(np.ceil(np.log2(n)))
+        return acdc_mod.rectangular_size(self.n_in, self.n_out, self.lane_multiple)
+
+    def param_count(self) -> int:
+        n, ni, no = self.n_op, self.n_in, self.n_out
+        if self.kind == "dense":
+            return ni * no + (no if self.bias else 0)
+        if self.kind == "low_rank":
+            return self.rank * (ni + no) + (no if self.bias else 0)
+        if self.kind == "circulant":
+            return 2 * n + (no if self.bias else 0)
+        if self.kind == "fastfood":
+            return 3 * n + (no if self.bias else 0)
+        if self.kind == "acdc":
+            per = 2 * n + (n if self.bias else 0)
+            return per * self.k
+        if self.kind == "afdf":
+            return 4 * n * self.k  # complex a, d = 2 reals each; no bias
+        raise ValueError(self.kind)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def init_sell_params(rng: jax.Array, cfg: SellConfig, dtype=jnp.float32) -> dict:
+    n = cfg.n_op
+    if cfg.kind == "dense":
+        rw, rb = jax.random.split(rng)
+        scale = cfg.dense_init_scale / np.sqrt(cfg.n_in)
+        p = {"w": scale * jax.random.normal(rw, (cfg.n_in, cfg.n_out), dtype)}
+        if cfg.bias:
+            p["b"] = jnp.zeros((cfg.n_out,), dtype)
+        return p
+    if cfg.kind == "low_rank":
+        ru, rv, rb = jax.random.split(rng, 3)
+        su = 1.0 / np.sqrt(cfg.n_in)
+        sv = 1.0 / np.sqrt(max(cfg.rank, 1))
+        p = {
+            "u": su * jax.random.normal(ru, (cfg.n_in, cfg.rank), dtype),
+            "v": sv * jax.random.normal(rv, (cfg.rank, cfg.n_out), dtype),
+        }
+        if cfg.bias:
+            p["b"] = jnp.zeros((cfg.n_out,), dtype)
+        return p
+    if cfg.kind == "circulant":
+        ra, rc = jax.random.split(rng)
+        # a ~ identity+noise; circulant first column ~ delta + noise so the
+        # layer starts near identity (same philosophy as the ACDC init).
+        a = 1.0 + cfg.init_std * jax.random.normal(ra, (n,), dtype)
+        c = cfg.init_std * jax.random.normal(rc, (n,), dtype)
+        c = c.at[0].add(1.0)
+        p = {"a": a, "c": c}
+        if cfg.bias:
+            p["b"] = jnp.zeros((cfg.n_out,), dtype)
+        return p
+    if cfg.kind == "fastfood":
+        r1, r2, r3 = jax.random.split(rng, 3)
+        # NOTE: the fixed random permutation P is NOT a parameter — it is
+        # derived deterministically from the layer size at apply time
+        # (compile-time constant), keeping the param tree purely float.
+        p = {
+            "d1": 1.0 + cfg.init_std * jax.random.normal(r1, (n,), dtype),
+            "d2": 1.0 + cfg.init_std * jax.random.normal(r2, (n,), dtype),
+            "d3": 1.0 + cfg.init_std * jax.random.normal(r3, (n,), dtype),
+        }
+        if cfg.bias:
+            p["b"] = jnp.zeros((cfg.n_out,), dtype)
+        return p
+    if cfg.kind == "acdc":
+        acfg = _acdc_cfg(cfg)
+        return acdc_mod.init_acdc_params(rng, acfg, dtype)
+    if cfg.kind == "afdf":
+        ra, rd = jax.random.split(rng)
+        # complex diagonals stored as separate real/imag parts
+        a_re = 1.0 + cfg.init_std * jax.random.normal(ra, (cfg.k, n), dtype)
+        d_re = 1.0 + cfg.init_std * jax.random.normal(rd, (cfg.k, n), dtype)
+        a_im = cfg.init_std * jax.random.normal(jax.random.fold_in(ra, 1), (cfg.k, n), dtype)
+        d_im = cfg.init_std * jax.random.normal(jax.random.fold_in(rd, 1), (cfg.k, n), dtype)
+        return {"a_re": a_re, "a_im": a_im, "d_re": d_re, "d_im": d_im}
+    raise ValueError(cfg.kind)
+
+
+def _acdc_cfg(cfg: SellConfig) -> acdc_mod.ACDCConfig:
+    return acdc_mod.ACDCConfig(
+        n=cfg.n_op,
+        k=cfg.k,
+        relu=cfg.relu,
+        permute=cfg.permute,
+        bias=cfg.bias,
+        init_std=cfg.init_std,
+        method=cfg.method,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Apply.
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, n: int) -> jax.Array:
+    pad = n - x.shape[-1]
+    if pad:
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def structured_linear(params: dict, x: jax.Array, cfg: SellConfig) -> jax.Array:
+    """Apply the configured SELL: ``x (..., n_in) -> y (..., n_out)``."""
+    if cfg.kind == "dense":
+        y = jnp.matmul(x, params["w"].astype(x.dtype))
+        if cfg.bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    if cfg.kind == "low_rank":
+        y = jnp.matmul(jnp.matmul(x, params["u"].astype(x.dtype)),
+                       params["v"].astype(x.dtype))
+        if cfg.bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    n = cfg.n_op
+    h = _pad_to(x, n)
+    if cfg.kind == "circulant":
+        h = h * params["a"].astype(x.dtype)
+        hf = jnp.fft.rfft(h.astype(jnp.float32), axis=-1)
+        cf = jnp.fft.rfft(params["c"].astype(jnp.float32))
+        y = jnp.fft.irfft(hf * cf, n=n, axis=-1).astype(x.dtype)
+        y = y[..., : cfg.n_out]
+        if cfg.bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    if cfg.kind == "fastfood":
+        perm = jnp.asarray(
+            np.random.RandomState(n).permutation(n).astype(np.int32))
+        h = h * params["d3"].astype(x.dtype)
+        h = transforms.fwht(h)
+        h = h * params["d2"].astype(x.dtype)
+        h = jnp.take(h, perm, axis=-1)
+        h = transforms.fwht(h)
+        h = h * params["d1"].astype(x.dtype)
+        y = h[..., : cfg.n_out]
+        if cfg.bias:
+            y = y + params["b"].astype(x.dtype)
+        return y
+    if cfg.kind == "acdc":
+        acfg = _acdc_cfg(cfg)
+        return acdc_mod.acdc_rectangular(params, x, acfg, cfg.n_in, cfg.n_out)
+    if cfg.kind == "afdf":
+        hc = h.astype(jnp.complex64)
+        for i in range(cfg.k):
+            a = (params["a_re"][i] + 1j * params["a_im"][i]).astype(jnp.complex64)
+            d = (params["d_re"][i] + 1j * params["d_im"][i]).astype(jnp.complex64)
+            hc = hc * a
+            hc = jnp.fft.fft(hc, axis=-1)
+            hc = hc * d
+            hc = jnp.fft.ifft(hc, axis=-1)
+        return hc[..., : cfg.n_out]
+    raise ValueError(cfg.kind)
+
+
+def sell_dense_equivalent(params: dict, cfg: SellConfig) -> jax.Array:
+    """Materialize any *linear* SELL as an explicit (n_in, n_out) matrix."""
+    if cfg.relu:
+        raise ValueError("dense equivalent undefined with ReLU")
+    eye = jnp.eye(cfg.n_in, dtype=jnp.float32)
+    out = structured_linear(jax.tree.map(lambda p: p, params), eye, cfg)
+    return out

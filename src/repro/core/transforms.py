@@ -1,0 +1,185 @@
+"""Orthonormal fast transforms used by SELL layers.
+
+Implements the DCT-II / DCT-III (inverse) pair in three interchangeable ways:
+
+* ``dct_matrix`` — the explicit ``N x N`` orthonormal DCT-II matrix (paper
+  eq. 9).  Used as the oracle for tests and as the operand of the MXU
+  matmul-DCT path (the TPU-native formulation, see DESIGN.md section 3).
+* ``dct`` / ``idct`` — FFT-based O(N log N) transforms via Makhoul's (1980)
+  even-permutation method, matching the paper's cuFFT "multiple call"
+  implementation.  Pure ``jnp.fft``; differentiable.
+* ``fwht`` — fast Walsh-Hadamard transform (for the Fastfood baseline).
+
+All transforms operate on the LAST axis and are orthonormal, so
+``idct(dct(x)) == x`` and ``dct_matrix(N) @ dct_matrix(N).T == I``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dct_matrix",
+    "idct_matrix",
+    "dct",
+    "idct",
+    "dct_via_matmul",
+    "idct_via_matmul",
+    "fwht",
+    "make_riffle",
+    "invert_permutation",
+]
+
+
+# ---------------------------------------------------------------------------
+# Explicit DCT matrices (paper eq. 9, orthonormal convention).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _dct_matrix_np(n: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix as float64 numpy (cached host-side)."""
+    k = np.arange(n)[None, :]          # frequency index
+    m = np.arange(n)[None, :].T        # sample index
+    mat = np.cos(np.pi * (2.0 * m + 1.0) * k / (2.0 * n))
+    mat *= np.sqrt(2.0 / n)
+    mat[:, 0] *= 1.0 / np.sqrt(2.0)    # eps_0 = 1/sqrt(2)
+    return mat  # (n_in, n_freq): y = x @ mat  is the DCT-II of x
+
+
+def dct_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal DCT-II matrix ``C`` with ``y = x @ C``; ``C^-1 = C.T``."""
+    return jnp.asarray(_dct_matrix_np(n), dtype=dtype)
+
+
+def idct_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse (DCT-III) matrix, i.e. the transpose of :func:`dct_matrix`."""
+    return jnp.asarray(_dct_matrix_np(n).T, dtype=dtype)
+
+
+def dct_via_matmul(x: jax.Array, *, dtype=None) -> jax.Array:
+    """DCT-II along the last axis via a dense matmul (MXU-native path)."""
+    n = x.shape[-1]
+    c = dct_matrix(n, dtype=dtype or x.dtype)
+    return jnp.matmul(x, c)
+
+
+def idct_via_matmul(x: jax.Array, *, dtype=None) -> jax.Array:
+    n = x.shape[-1]
+    c = idct_matrix(n, dtype=dtype or x.dtype)
+    return jnp.matmul(x, c)
+
+
+# ---------------------------------------------------------------------------
+# FFT-based DCT (Makhoul 1980) — the O(N log N) path.
+# ---------------------------------------------------------------------------
+
+def _makhoul_permute(x: jax.Array) -> jax.Array:
+    """v[n] = x[2n] for n < ceil(N/2); v[N-1-n] = x[2n+1]."""
+    n = x.shape[-1]
+    evens = x[..., 0::2]
+    odds = x[..., 1::2]
+    return jnp.concatenate([evens, jnp.flip(odds, axis=-1)], axis=-1)[..., :n]
+
+
+def _makhoul_unpermute(v: jax.Array) -> jax.Array:
+    n = v.shape[-1]
+    half = (n + 1) // 2
+    out = jnp.zeros_like(v)
+    out = out.at[..., 0::2].set(v[..., :half])
+    out = out.at[..., 1::2].set(jnp.flip(v[..., half:], axis=-1))
+    return out
+
+
+def dct(x: jax.Array) -> jax.Array:
+    """Orthonormal DCT-II along the last axis, O(N log N) via rFFT.
+
+    Matches ``x @ dct_matrix(N)`` to float tolerance.
+    """
+    n = x.shape[-1]
+    in_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    v = _makhoul_permute(xf)
+    vf = jnp.fft.fft(v.astype(jnp.complex64), axis=-1)[..., :n]
+    k = jnp.arange(n, dtype=jnp.float32)
+    # W = 2 * exp(-i pi k / 2N); taking the real part of W * V gives 2x the
+    # unnormalized DCT-II.
+    w = 2.0 * jnp.exp(-1j * jnp.pi * k / (2.0 * n)).astype(jnp.complex64)
+    un = jnp.real(vf * w)  # un[k] = 2 * X[k] (unnormalized DCT-II)
+    # Orthonormal scaling: Y[k] = sqrt(2/N) * eps_k * X[k], eps_0 = 1/sqrt(2).
+    scale = jnp.full((n,), 0.5 * np.sqrt(2.0 / n), dtype=jnp.float32)
+    scale = scale.at[0].set(0.5 * np.sqrt(1.0 / n))
+    out = un * scale
+    return out.astype(in_dtype)
+
+
+def idct(y: jax.Array) -> jax.Array:
+    """Orthonormal DCT-III (inverse of :func:`dct`) along the last axis."""
+    n = y.shape[-1]
+    in_dtype = y.dtype
+    yf = y.astype(jnp.float32)
+    # undo orthonormal scaling back to the un[k] = 2*X[k] spectrum
+    scale = jnp.full((n,), 1.0 / (0.5 * np.sqrt(2.0 / n)), dtype=jnp.float32)
+    scale = scale.at[0].set(1.0 / (0.5 * np.sqrt(1.0 / n)))
+    un = yf * scale  # un[k] = 2 * sum_m v[m] cos(pi (2m+1) k / 2N) * ... real part spectrum
+    k = jnp.arange(n, dtype=jnp.float32)
+    w = jnp.exp(1j * jnp.pi * k / (2.0 * n)).astype(jnp.complex64)
+    # Rebuild the length-N complex spectrum of v.  For a real v,
+    # Vf[k] = 0.5 * w[k] * (un[k] - i*un_flip[k]) with un_flip[0] = 0.
+    un_flip = jnp.concatenate(
+        [jnp.zeros_like(un[..., :1]), jnp.flip(un[..., 1:], axis=-1)], axis=-1
+    )
+    vf = 0.5 * w * (un - 1j * un_flip)
+    v = jnp.fft.ifft(vf.astype(jnp.complex64), axis=-1).real
+    out = _makhoul_unpermute(v)
+    return out.astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard (for the Fastfood baseline).
+# ---------------------------------------------------------------------------
+
+def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
+    """Fast Walsh-Hadamard transform along the last axis (N must be 2^k)."""
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"FWHT needs a power-of-two size, got {n}")
+    orig_shape = x.shape
+    h = 1
+    y = x
+    while h < n:
+        y = y.reshape(*orig_shape[:-1], n // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    y = y.reshape(orig_shape)
+    if normalize:
+        y = y / jnp.sqrt(jnp.asarray(n, dtype=x.dtype))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Permutations ("adjacent SELLs are incoherent", paper section 6.2).
+# ---------------------------------------------------------------------------
+
+def make_riffle(n: int) -> np.ndarray:
+    """Perfect-shuffle (riffle) permutation indices for size ``n``.
+
+    Deterministic, O(1) metadata to store (just the size).  Interleaves the
+    two halves: [0, n/2, 1, n/2+1, ...].
+    """
+    half = (n + 1) // 2
+    idx = np.empty((n,), dtype=np.int32)
+    idx[0::2] = np.arange(half)
+    idx[1::2] = np.arange(half, n)
+    return idx
+
+
+def invert_permutation(p: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(p)
+    inv[p] = np.arange(len(p), dtype=p.dtype)
+    return inv

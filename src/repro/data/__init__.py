@@ -1,0 +1,14 @@
+"""Deterministic, shardable synthetic data pipelines.
+
+Offline container: no real corpora.  The pipeline is nevertheless built
+like a production one — stateless index-based generation (any step's batch
+is reproducible from (seed, step) alone), which makes data state trivially
+checkpointable and elastic: a restarted job at step k on a different mesh
+regenerates exactly the same global batch and reshards it.
+"""
+
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig,
+    SyntheticLM,
+    make_batch_specs,
+)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical ACDC hot path.
+
+Layout (per repo convention):
+
+* ``acdc_fused.py``   — single-call fused kernel (pl.pallas_call + BlockSpec)
+* ``scaled_matmul.py``— blocked (m,n,k) scaled matmul kernel
+* ``ops.py``          — jit'd public wrappers + custom VJP (recompute bwd)
+* ``ref.py``          — pure-jnp oracles the tests assert against
+"""

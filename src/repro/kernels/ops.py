@@ -1,0 +1,118 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``acdc_fused`` is the production entry point used by the model zoo when
+``method='pallas'``:
+
+* N <= MAX_FUSED_N      -> single fused kernel (paper's "single call");
+* larger N              -> two chained ``scaled_matmul`` kernels with the
+                           diagonals fused (paper's "multiple call");
+* custom VJP that RECOMPUTES the transform-domain intermediate ``h2`` in
+  the backward pass instead of storing it — the paper's section 5.3
+  memory/runtime trade, expressed as a custom_vjp.
+
+The backward formulas are the paper's eqs. (10)-(14):
+
+    dL/dbias = sum_rows (g C)
+    dL/dd    = sum_rows h2 * (g C),      h2 = (x*a) C   (recomputed)
+    dL/da    = sum_rows x * ((g C * d) C^T)
+    dL/dx    = a * ((g C * d) C^T)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms
+from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import scaled_matmul as smm_mod
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _flatten(x):
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
+    n = x2.shape[-1]
+    c = transforms.dct_matrix(n, dtype=jnp.float32)
+    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    if n <= fused_mod.MAX_FUSED_N:
+        return fused_mod.acdc_fused_pallas(x2, a, d, bias, c, ct,
+                                           interpret=interpret)
+    # Two-call path: h2 lands in HBM exactly once.  A and D are fused as
+    # pre-scales; the bias-on-D commutes through the final matmul as
+    # bias @ C^T (an O(N^2) one-off, amortized over the batch).
+    h2 = smm_mod.scaled_matmul_pallas(x2, c, pre=a, interpret=interpret)
+    bias_t = None
+    if bias is not None:
+        bias_t = (bias.astype(jnp.float32) @ ct).astype(x2.dtype)
+    return smm_mod.scaled_matmul_pallas(h2, ct, pre=d, bias=bias_t,
+                                        interpret=interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def acdc_fused(x, a, d, bias):
+    """Fused ACDC: ``y = ((x*a) C * d + bias) C^T`` along the last axis.
+
+    ``bias`` may be None (resolved before the custom_vjp boundary by
+    :func:`acdc_fused_op`).
+    """
+    x2, shape = _flatten(x)
+    y = _acdc_fwd_impl(x2, a, d, bias, interpret=_INTERPRET)
+    return y.reshape(shape)
+
+
+def _acdc_vjp_fwd(x, a, d, bias):
+    y = acdc_fused(x, a, d, bias)
+    return y, (x, a, d)
+
+
+def _acdc_vjp_bwd(res, g):
+    x, a, d = res
+    n = x.shape[-1]
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    dct = transforms.dct_via_matmul if n <= 4096 else transforms.dct
+    idct = transforms.idct_via_matmul if n <= 4096 else transforms.idct
+    gc = dct(g2.astype(jnp.float32))
+    dbias = jnp.sum(gc, axis=0).astype(d.dtype)
+    h2 = dct(x2.astype(jnp.float32) * a.astype(jnp.float32))  # recompute (paper 5.3)
+    dd = jnp.sum(h2 * gc, axis=0).astype(d.dtype)
+    dh1 = idct(gc * d.astype(jnp.float32))
+    da = jnp.sum(x2.astype(jnp.float32) * dh1, axis=0).astype(a.dtype)
+    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype).reshape(shape)
+    return dx, da, dd, dbias
+
+
+acdc_fused.defvjp(_acdc_vjp_fwd, _acdc_vjp_bwd)
+
+
+def acdc_fused_op(
+    x: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """User-facing fused ACDC; handles the optional bias."""
+    if bias is None:
+        bias = jnp.zeros_like(d)
+    return acdc_fused(x, a, d, bias)
+
+
+def scaled_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    pre: Optional[jax.Array] = None,
+    post: Optional[jax.Array] = None,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Blocked scaled matmul on the last axis of ``x``."""
+    x2, shape = _flatten(x)
+    y = smm_mod.scaled_matmul_pallas(x2, w, pre, post, bias,
+                                     interpret=_INTERPRET)
+    return y.reshape(*shape[:-1], w.shape[-1])

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (including
+# jax): the host-platform device count locks on first jax init.  They give
+# this CPU-only container 512 placeholder devices so the production meshes
+# (16x16 single-pod, 2x16x16 multi-pod) can be built and every
+# (architecture x input-shape) cell can be .lower().compile()'d for real.
+
+"""Multi-pod dry-run driver.
+
+For every (arch x shape) cell and mesh:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*input ShapeDtypeStructs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes scrape
+
+Results stream into ``results/dryrun/<cell>.json`` so interrupted sweeps
+resume where they stopped.  Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_1_7b \
+        --shape train_4k [--multi-pod] [--all] [--force]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist import sharding as shard_mod
+from repro.dist import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.optim import OptimizerConfig, cosine_schedule, make_optimizer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'bf16[128,1024]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (output-shape sized)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.  %all-reduce.5 = bf16[8192,2752]{1,0} all-reduce(...)
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or op in _COLLECTIVES:
+            key = op.replace("-start", "").replace("-done", "")
+            if key in out:
+                out[key] += _shape_bytes(m.group(1))
+                count[key] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": int(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# HLO-text analysis: XLA's compiled.cost_analysis() on the CPU backend does
+# not include dots inside fused/called computations, so FLOPs and bytes are
+# derived by walking the optimized HLO text instead (the numbers then come
+# from the actual compiled schedule).
+# ---------------------------------------------------------------------------
+
+_DOT_RE = re.compile(
+    r"= \S+ dot\((.*?)\)(?:.*?lhs_contracting_dims=\{([\d,]*)\})?"
+)
+_OP_RE = re.compile(r"^\s*(?:ROOT )?%?[\w.\-]+ = (\S+\[[\d,]*\]\S*) ([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_SHAPES_IN_LINE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_elems(dt: str, dims: str):
+    if dt not in _DTYPE_BYTES:
+        return None
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?(%[\w.\-]+) = (\w+)\[([\d,]*)\]")
+
+
+def hlo_text_analysis(hlo_text: str) -> dict:
+    """Walk every computation in the optimized HLO.
+
+    * flops: 2 * out_elems * contraction for every ``dot`` anywhere
+      (fusion bodies included — that is where the real matmuls live).
+      Operand shapes are not printed inline in optimized HLO, so a first
+      pass builds a name -> shape map (per computation, global fallback).
+    * bytes: for every op OUTSIDE fused-computation bodies (kernel
+      boundaries), output bytes + operand bytes — a fusion-boundary HBM
+      traffic estimate;
+    * while bodies are counted once: callers unroll layer scans first
+      (see benchmarks/roofline.py).
+    """
+    lines = hlo_text.splitlines()
+    # pass 1: op name -> (dtype, dims) per computation + global
+    comp = "entry"
+    shapes_global: dict = {}
+    shapes_by_comp: dict = {}
+    for raw in lines:
+        mcomp = _COMP_RE.match(raw)
+        if mcomp:
+            comp = mcomp.group(1)
+            continue
+        m = _DEF_RE.match(raw)
+        if m:
+            name, dt, dims = m.group(1), m.group(2), m.group(3)
+            entry = (dt, dims)
+            shapes_global[name] = entry
+            shapes_by_comp.setdefault(comp, {})[name] = entry
+
+    def lookup(comp_name, op_name):
+        return (shapes_by_comp.get(comp_name, {}).get(op_name)
+                or shapes_global.get(op_name))
+
+    flops = 0.0
+    bytes_ = 0.0
+    comp = "entry"
+    for raw in lines:
+        mcomp = _COMP_RE.match(raw)
+        if mcomp:
+            comp = mcomp.group(1)
+            continue
+        s = raw.strip()
+        if " dot(" in s or s.startswith("%dot") or " = " in s and " dot(" in s:
+            md = _DEF_RE.match(raw)
+            mo = re.search(r"dot\((%[\w.\-]+)(?:, (%[\w.\-]+))?\)", s)
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+            mb = re.search(r"lhs_batch_dims=\{([\d,]*)\}", s)
+            if md and mo and mc:
+                out_elems = _shape_elems(md.group(2), md.group(3))
+                lhs_entry = lookup(comp, mo.group(1))
+                contract = 1
+                if lhs_entry is not None:
+                    lhs_dims = [int(d) for d in lhs_entry[1].split(",") if d]
+                    if mc.group(1):
+                        for ci in mc.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                contract *= lhs_dims[ci]
+                if out_elems is not None:
+                    flops += 2.0 * out_elems * contract
+        m = _OP_RE.match(raw)
+        if m and not comp.startswith("fused_"):
+            op = m.group(2)
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+                continue
+            # output bytes
+            md = _DEF_RE.match(raw)
+            if md:
+                n = _shape_elems(md.group(2), md.group(3))
+                if n is not None:
+                    bytes_ += n * _DTYPE_BYTES[md.group(2)]
+            # operand bytes via name lookup
+            inner = s[s.index("(") + 1:] if "(" in s else ""
+            for op_name in re.findall(r"(%[\w.\-]+)", inner):
+                entry = lookup(comp, op_name)
+                if entry is not None:
+                    n = _shape_elems(entry[0], entry[1])
+                    if n is not None:
+                        bytes_ += n * _DTYPE_BYTES[entry[0]]
+    return {"flops": flops, "bytes": bytes_}
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(arch: str, shape_name: str, mesh, sell: str = "dense",
+               accum_steps: int = 1, n_layers: int = 0,
+               cfg_overrides: dict | None = None):
+    """Returns (fn, args, in_shardings, out_shardings) ready to lower.
+
+    ``n_layers`` > 0 overrides the layer count (and encoder depth for
+    enc-dec archs) — used by the roofline module's two-point loop-count
+    extrapolation (XLA cost_analysis counts while bodies once).
+    """
+    import dataclasses
+
+    cfg = registry.get_config(arch)
+    if sell != "dense":
+        cfg = dataclasses.replace(cfg, sell_kind=sell)
+    if n_layers:
+        upd = {"n_layers": n_layers}
+        if cfg.family == "encdec":
+            upd["n_encoder_layers"] = n_layers
+        cfg = dataclasses.replace(cfg, **upd)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if cfg.sell_kind != "dense" and not cfg.sell_batch_axes:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        cfg = dataclasses.replace(cfg, sell_batch_axes=axes)
+    shape = registry.get_shape(shape_name)
+    model = get_model(cfg)
+    rep = _replicated(mesh)
+
+    specs = registry.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = make_optimizer(OptimizerConfig(kind="adamw"),
+                             cosine_schedule(3e-4, 1000, 100_000))
+        step_fn = steps_mod.make_train_step(model, cfg, opt,
+                                            accum_steps=accum_steps)
+        state_abs = steps_mod.abstract_state(model, cfg, opt)
+        state_sh = shard_mod.param_shardings(state_abs, mesh)
+        batch_abs = specs["batch"]
+        batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                shard_mod.data_specs(mesh, batch_abs))
+        metrics_sh = {"loss": rep, "grad_norm": rep, "update_norm": rep}
+        return (step_fn, (state_abs, batch_abs),
+                (state_sh, batch_sh), (state_sh, metrics_sh))
+
+    if shape.kind == "prefill":
+        params_abs = jax.eval_shape(
+            functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
+        params_sh = shard_mod.param_shardings(params_abs, mesh)
+        tok = specs["tokens"]
+        tok_sh = NamedSharding(mesh, shard_mod.data_specs(mesh, tok))
+        args = [params_abs, tok]
+        in_sh = [params_sh, tok_sh]
+        fe = specs.get("frontend_embeds")
+
+        def prefill(params, tokens, frontend_embeds=None):
+            return model.apply(params, tokens, cfg, frontend_embeds)
+
+        if fe is not None:
+            args.append(fe)
+            in_sh.append(NamedSharding(mesh, shard_mod.data_specs(mesh, fe)))
+        # logits: batch over (pod,data), vocab over model when divisible
+        vspec = shard_mod.spec_for(mesh, (shape.global_batch, shape.seq_len,
+                                          cfg.vocab_size),
+                                   ("batch", None, "vocab"))
+        out_sh = NamedSharding(mesh, vspec)
+        return prefill, tuple(args), tuple(in_sh), out_sh
+
+    if shape.kind == "decode":
+        params_abs = jax.eval_shape(
+            functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
+        params_sh = shard_mod.param_shardings(params_abs, mesh)
+        cache_abs = jax.eval_shape(
+            functools.partial(model.init_cache, cfg, shape.global_batch,
+                              shape.seq_len))
+        cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                shard_mod.cache_specs(cache_abs, mesh))
+        serve = steps_mod.make_serve_step(model, cfg)
+        tok, pos = specs["tokens"], specs["position"]
+
+        def decode(params, cache, tokens, position):
+            return serve(params, cache, tokens, position,
+                         jax.random.PRNGKey(0))
+
+        args = (params_abs, cache_abs, tok, pos)
+        in_sh = (params_sh, cache_sh, rep, rep)
+        out_sh = (rep, cache_sh)
+        return decode, args, in_sh, out_sh
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             sell: str = "dense", save: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}.{shape_name}.{mesh_name}" + (
+        "" if sell == "dense" else f".{sell}")
+    skip = registry.skips(arch, shape_name)
+    if skip:
+        rec = {"cell": cell_id, "status": "skipped", "reason": skip}
+        if save:
+            _save(cell_id, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh, sell)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_dev = mesh.devices.size
+        rec = {
+            "cell": cell_id,
+            "status": "ok",
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "sell": sell,
+            "n_devices": int(n_dev),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": _mem_dict(mem),
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0)),
+            "collectives": coll,
+        }
+    except Exception as e:  # noqa: BLE001 — a failed cell is a system bug
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    if save:
+        _save(cell_id, rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _save(cell_id: str, rec: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=registry.ARCHS)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in registry.SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--sell", default="dense",
+                    help="SELL kind for projections (dense|acdc|...)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have results")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = registry.cells(include_skipped=True)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            suffix = "" if args.sell == "dense" else f".{args.sell}"
+            path = os.path.join(
+                RESULTS_DIR, f"{arch}.{shape}.{mesh_name}{suffix}.json")
+            if not args.force and os.path.exists(path):
+                with open(path) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip-cached] {arch}.{shape}.{mesh_name}")
+                    continue
+            t0 = time.time()
+            rec = run_cell(arch, shape, mp, sell=args.sell)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                gib = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+                extra = (f" args={gib:.2f}GiB/dev "
+                         f"flops={rec['flops_per_device']:.3g} "
+                         f"coll={rec['collectives']['total_bytes']/2**30:.3f}GiB "
+                         f"({time.time()-t0:.0f}s)")
+            elif status == "error":
+                extra = " " + rec["error"][:200]
+            print(f"[{status}] {arch}.{shape}.{mesh_name}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required for the dry-run's
+512-placeholder-device trick to work (device count locks on first use).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the leading "pod"
+    axis maps onto the slow inter-pod (DCN/ICI-bridge) links and only ever
+    carries data-parallel gradient traffic (and optionally compressed —
+    see repro/dist/compression.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over however many local devices exist (tests/CPU)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

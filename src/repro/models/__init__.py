@@ -1,0 +1,48 @@
+"""Model zoo: one registry over the four architecture families.
+
+``get_model(cfg)`` returns a uniform functional interface:
+
+    model.init(rng, cfg)                     -> params
+    model.apply(params, tokens, cfg, fe)     -> logits        (train/prefill)
+    model.loss_fn(params, batch, cfg)        -> scalar loss
+    model.init_cache(cfg, batch, max_len)    -> decode cache
+    model.decode_step(params, cache, t, pos, cfg) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.models import encdec, mamba2, transformer, zamba2
+from repro.models.common import ModelConfig  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    init: Callable
+    apply: Callable
+    loss_fn: Callable
+    init_cache: Optional[Callable] = None
+    decode_step: Optional[Callable] = None
+    module: Any = None
+
+
+_FAMILIES = {
+    "decoder": transformer,
+    "ssm": mamba2,
+    "hybrid": zamba2,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILIES[cfg.family]
+    return Model(
+        init=mod.init,
+        apply=mod.apply,
+        loss_fn=mod.loss_fn,
+        init_cache=getattr(mod, "init_cache", None),
+        decode_step=getattr(mod, "decode_step", None),
+        module=mod,
+    )

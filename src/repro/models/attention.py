@@ -1,0 +1,222 @@
+"""Grouped-query attention with RoPE variants, sliding windows and KV cache.
+
+One implementation serves: full attention (deepseek/llava), GQA with few KV
+heads (chatglm3 kv=2), qk-norm (qwen3), partial-rotary "2d" RoPE (chatglm3),
+per-layer local/global windows (gemma3 5:1), logit soft-capping, and the
+cross-attention used by the encoder-decoder (seamless).
+
+Train path computes full (Sq, Sk) score tiles with a dynamic causal+window
+mask so heterogeneous layer patterns survive ``lax.scan``.  Decode path
+appends one token to the cache and attends over the prefix.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import linear
+from repro.models.common import (
+    ModelConfig,
+    apply_rope,
+    causal_window_mask,
+    init_rms_norm,
+    rms_norm,
+)
+
+
+def init_attention(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
+                   cross: bool = False) -> dict:
+    dh = cfg.head_dim_
+    d = cfg.d_model
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    p = {
+        "wq": linear.linear_init(rq, d, cfg.n_heads * dh, cfg, "attn_qkv", dtype),
+        "wk": linear.linear_init(rk, d, cfg.n_kv_heads * dh, cfg, "attn_qkv", dtype),
+        "wv": linear.linear_init(rv, d, cfg.n_kv_heads * dh, cfg, "attn_qkv", dtype),
+        "wo": linear.linear_init(ro, cfg.n_heads * dh, d, cfg, "attn_out", dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(dh, dtype)
+        p["k_norm"] = init_rms_norm(dh, dtype)
+    return p
+
+
+def _project_qkv(params: dict, xq: jax.Array, xkv: jax.Array,
+                 cfg: ModelConfig):
+    dh = cfg.head_dim_
+    d = cfg.d_model
+    q = linear.linear_apply(params["wq"], xq, d, cfg.n_heads * dh, cfg, "attn_qkv")
+    k = linear.linear_apply(params["wk"], xkv, d, cfg.n_kv_heads * dh, cfg, "attn_qkv")
+    v = linear.linear_apply(params["wv"], xkv, d, cfg.n_kv_heads * dh, cfg, "attn_qkv")
+    q = q.reshape(*xq.shape[:-1], cfg.n_heads, dh)
+    k = k.reshape(*xkv.shape[:-1], cfg.n_kv_heads, dh)
+    v = v.reshape(*xkv.shape[:-1], cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], cfg: ModelConfig) -> jax.Array:
+    """q: (B, Sq, Hq, Dh), k/v: (B, Sk, Hkv, Dh) -> (B, Sq, Hq, Dh)."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores * (dh ** -0.5)
+    if cfg.attn_logit_softcap > 0:
+        cap = cfg.attn_logit_softcap
+        scores = cap * jnp.tanh(scores / cap)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                  positions: jax.Array, window: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Flash-structured attention: online softmax over KV chunks.
+
+    Never materializes the (Sq, Sk) score matrix — live memory is
+    O(Sq * chunk) — which removes the dominant HBM-traffic term of vanilla
+    attention at training/prefill sequence lengths (see EXPERIMENTS.md
+    section Perf, hillclimb #1).  Same math as :func:`_sdpa` including the
+    causal+window mask and logit soft-capping; numerics verified by
+    tests/test_attention_impls.py.
+    """
+    b, sq, hq, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    group = hq // hkv
+    chunk = min(cfg.attn_chunk, sk)
+    n_chunks = sk // chunk if sk % chunk == 0 else -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, sq, hkv, group, dh).astype(jnp.float32)
+    scale = dh ** -0.5
+    q_pos = positions            # (B, Sq)
+    kpos_full = jnp.arange(n_chunks * chunk, dtype=jnp.int32)
+
+    def body(carry, idx):
+        m, l, acc = carry        # m,l: (B,Hkv,G,Sq); acc: (B,Hkv,G,Sq,Dh)
+        start = idx * chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, chunk, 1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos_full, start, chunk, 0)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       kc.astype(jnp.float32)) * scale
+        if cfg.attn_logit_softcap > 0:
+            cap = cfg.attn_logit_softcap
+            s = cap * jnp.tanh(s / cap)
+        valid = kp < sk  # (Ck,) — mask the padded tail chunk
+        msk = causal_window_mask(q_pos, kp[None, :], window)  # (B, Sq, Ck)
+        msk = jnp.logical_and(msk, valid[None, None, :])
+        s = jnp.where(msk[:, None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), jnp.arange(n_chunks, dtype=jnp.int32),
+        unroll=cfg.scan_unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    window: jax.Array,
+    cfg: ModelConfig,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Self-attention (kv=None) or cross-attention (kv = encoder k/v source).
+
+    x: (B, S, D); positions: (B, S); window: traced int32 scalar (0=global).
+    """
+    xkv = x if kv is None else kv[0]
+    q, k, v = _project_qkv(params, x, xkv, cfg)
+    if kv is None:
+        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+        if cfg.attn_impl == "chunked":
+            out = _sdpa_chunked(q, k, v, positions, window, cfg)
+            dh = cfg.head_dim_
+            out = out.reshape(*x.shape[:-1], cfg.n_heads * dh)
+            return linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                                       cfg.d_model, cfg, "attn_out")
+        mask = causal_window_mask(positions, positions, window)
+    else:
+        # cross-attention: no RoPE, full visibility over encoder states
+        mask = None
+    out = _sdpa(q, k, v, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * dh)
+    return linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                               cfg.d_model, cfg, "attn_out")
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache).
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int, dtype) -> dict:
+    dh = cfg.head_dim_
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                   # (B, 1, D)
+    cache_k: jax.Array,             # (B, Smax, Hkv, Dh) — this layer's slice
+    cache_v: jax.Array,
+    position: jax.Array,            # (B,) current index
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out (B,1,D), new_cache_k, new_cache_v)."""
+    b, _, _ = x.shape
+    smax = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos2 = position[:, None]  # (B,1)
+    q = apply_rope(q, pos2, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_fraction, cfg.rope_theta)
+    # scatter the new k/v at `position`
+    onehot = jax.nn.one_hot(position, smax, dtype=k.dtype)  # (B, Smax)
+    cache_k = cache_k + onehot[:, :, None, None] * k
+    cache_v = cache_v + onehot[:, :, None, None] * v
+    k_pos = jnp.arange(smax, dtype=jnp.int32)[None, :]  # (1, Smax)
+    # causal also excludes unwritten cache slots (they sit beyond `position`)
+    mask = causal_window_mask(pos2, k_pos, window)      # (B, 1, Smax)
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(b, 1, cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, cache_k, cache_v

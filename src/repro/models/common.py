@@ -1,0 +1,238 @@
+"""Shared model configuration and primitive layers for the model zoo.
+
+One ``ModelConfig`` dataclass covers all ten assigned architectures; the
+family field selects the top-level assembly (decoder / encdec / ssm /
+hybrid).  The paper's technique is integrated through ``sell_kind`` /
+``sell_targets``: any projection listed in ``sell_targets`` is built as a
+structured efficient linear layer (default ACDC cascade) instead of a dense
+matrix — see ``repro/models/linear.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder"          # decoder | encdec | ssm | hybrid
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    max_seq_len: int = 8192
+
+    # --- attention flavour ---
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0       # chatglm3 "2d RoPE": rotary on half dims
+    qk_norm: bool = False            # qwen3
+    sliding_window: int = 0          # 0 = full attention
+    global_every: int = 0            # gemma3: every k-th layer is global
+    attn_logit_softcap: float = 0.0
+
+    # --- mlp flavour ---
+    mlp_act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU)
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    d_inner: int = 0                 # default 2*d_model
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # --- hybrid (zamba2) ---
+    attn_every: int = 0              # shared attn block every k ssm layers
+
+    # --- enc-dec (seamless) ---
+    n_encoder_layers: int = 0
+
+    # --- modality frontends (stubs per assignment) ---
+    frontend: Optional[str] = None   # "vision" | "audio"
+    n_frontend_tokens: int = 0       # patches / audio frames per example
+
+    # --- SELL integration (the paper's technique) ---
+    sell_kind: str = "dense"         # dense | acdc | fastfood | circulant | low_rank
+    sell_k: int = 2                  # cascade depth per replaced projection
+    # projection roles the SELL replaces (prefix match): attention output,
+    # gated-MLP, mamba in/out, zamba shared-block input.  "attn_qkv" and
+    # "expert" are deliberately opt-in.
+    sell_targets: Tuple[str, ...] = ("attn_out", "mlp", "ssm", "shared_in")
+    sell_relu: bool = False
+    sell_permute: bool = True
+    sell_rank: int = 64              # for the low_rank baseline
+    sell_method: str = "auto"        # transform backend: auto|fft|matmul|pallas
+    # pin SELL activations to batch-only sharding (feature axis local) so
+    # the DCT/FFT never crosses a sharded dim — see linear.py and
+    # EXPERIMENTS.md §Perf hillclimb #3 (False reproduces the naive +119x
+    # collective blowup).  sell_batch_axes names the mesh axes the batch
+    # dim may shard over (set by the launcher/dry-run per mesh).
+    sell_local_features: bool = True
+    sell_batch_axes: Tuple[str, ...] = ()
+
+    # --- performance knobs (see EXPERIMENTS.md section Perf) ---
+    # Defaults are the OPTIMIZED implementations (hillclimb-confirmed,
+    # equivalence-tested in tests/test_perf_impls.py); the paper-faithful
+    # baselines stay selectable ("vanilla"/"gather"/"einsum").
+    # "vanilla": materialize (Sq, Sk) scores  |  "chunked": online-softmax
+    # over KV chunks, O(S*chunk) live memory (flash-attention structure).
+    attn_impl: str = "chunked"
+    attn_chunk: int = 1024
+    # "gather": take_along_axis over the vocab axis (all-gathers sharded
+    # logits)  |  "onehot": lse - sum(logits*onehot) (psum-friendly).
+    ce_impl: str = "onehot"
+    # "einsum": one-hot dispatch/combine einsums, O(T*E*C*d) FLOPs
+    # "scatter": scatter/gather dispatch, O(T*k*d) FLOPs.
+    moe_impl: str = "scatter"
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    remat: bool = True
+    # Unroll the layer scans (roofline analysis only): XLA's cost_analysis
+    # counts a while-loop body ONCE, so per-layer costs must be measured on
+    # unrolled (small-L) compiles and extrapolated.  Never set on full
+    # configs — compile time is O(L).
+    scan_unroll: bool = False
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner_(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def param_dtype(self):
+        return jnp.float32  # master weights; compute casts to self.dtype
+
+    @property
+    def compute_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def layer_windows(self) -> np.ndarray:
+        """Per-layer attention window (0 = global), e.g. gemma3's 5:1."""
+        w = np.full((self.n_layers,), self.sliding_window, dtype=np.int32)
+        if self.global_every > 0:
+            w[self.global_every - 1 :: self.global_every] = 0
+        return w
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (functional, params = dict pytrees).
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (scale - 1)
+
+
+def embed_init(rng: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(rng, (vocab, d), dtype) * (d ** -0.5)}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    # logits in fp32 for a stable softmax-xent
+    return jnp.matmul(x.astype(jnp.float32), params["table"].astype(jnp.float32).T)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float,
+               theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    rot_dim = int(dh * fraction) // 2 * 2
+    if rot_dim == 0:
+        return x
+    inv = rope_frequencies(dh, fraction, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(*x1.shape[:-1], rot_dim)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot_dim:]], axis=-1
+    )
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  cfg: "ModelConfig") -> jax.Array:
+    """Masked next-token CE.  Two implementations:
+
+    * "gather" — take_along_axis over the vocab axis.  Under vocab-sharded
+      (TP) logits, XLA SPMD resolves the gather by ALL-GATHERING the full
+      (tokens, V) logits — the dominant collective in the baseline roofline
+      (EXPERIMENTS.md section Perf, hillclimb #2).
+    * "onehot" — lse(logits) - sum(logits * onehot(labels)): both terms are
+      vocab-axis reductions, so the sharded dimension reduces locally and
+      only (tokens,) scalars cross the mesh (psum).
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    if cfg.ce_impl == "onehot":
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        true_logit = jnp.sum(lf * onehot, axis=-1)
+        nll = lse - true_logit
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array,
+                       window: jax.Array) -> jax.Array:
+    """Boolean mask (..., Sq, Sk): causal AND within sliding window.
+
+    ``window`` is a traced int32 scalar; 0 means no window (global).  This
+    keeps local and global layers on ONE code path so layer heterogeneity
+    (gemma3's 5:1) survives ``lax.scan`` over stacked layer params.
+    """
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    causal = dk <= dq
+    dist = dq - dk
+    in_window = jnp.where(window > 0, dist < window, True)
+    return jnp.logical_and(causal, in_window)

@@ -1,0 +1,112 @@
+"""Projection factory: dense or SELL (the paper's technique) per config.
+
+Every projection in the model zoo is created through :func:`linear_init` /
+:func:`linear_apply` with a ``role`` tag (``attn_qkv``, ``attn_out``,
+``mlp_in``, ``mlp_out``, ``expert`` ...).  When the role appears in
+``cfg.sell_targets`` and ``cfg.sell_kind != 'dense'``, the projection is a
+structured efficient linear layer — by default an order-K ACDC cascade with
+TPU lane alignment — giving O(N) parameters instead of O(N^2).
+
+This is the integration point that makes the paper's contribution a
+first-class feature of the framework rather than a bolt-on.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sell as sell_mod
+from repro.models.common import ModelConfig
+
+
+def _sell_cfg(cfg: ModelConfig, n_in: int, n_out: int) -> sell_mod.SellConfig:
+    return sell_mod.SellConfig(
+        kind=cfg.sell_kind,
+        n_in=n_in,
+        n_out=n_out,
+        k=cfg.sell_k,
+        relu=cfg.sell_relu,
+        permute=cfg.sell_permute,
+        bias=False,  # LM convention: norms carry the biases
+        rank=cfg.sell_rank,
+        method=cfg.sell_method,  # type: ignore[arg-type]
+        lane_multiple=128,
+    )
+
+
+def uses_sell(cfg: ModelConfig, role: str) -> bool:
+    return cfg.sell_kind != "dense" and any(
+        role.startswith(t) or t == role for t in cfg.sell_targets
+    )
+
+
+def linear_init(
+    rng: jax.Array,
+    n_in: int,
+    n_out: int,
+    cfg: ModelConfig,
+    role: str,
+    dtype=jnp.float32,
+) -> dict:
+    if uses_sell(cfg, role):
+        scfg = _sell_cfg(cfg, n_in, n_out)
+        return {"sell": sell_mod.init_sell_params(rng, scfg, dtype)}
+    scale = 1.0 / np.sqrt(n_in)
+    return {"w": scale * jax.random.normal(rng, (n_in, n_out), dtype)}
+
+
+def _batch_local_constraint(x: jax.Array, batch_axes=()) -> jax.Array:
+    """Constrain a SELL input/output to batch-only sharding.
+
+    The DCT/FFT inside a SELL mixes the ENTIRE feature axis, so if the
+    activation arrives feature-sharded (tensor-parallel layout), SPMD must
+    all-gather it for every transform — measured at +119x collective bytes
+    on qwen3.train_4k (EXPERIMENTS.md section Perf, hillclimb #3, refuted
+    step).  Pinning SELL activations to (batch-sharded, feature-local)
+    keeps the O(N log N) transform collective-free; the O(N) diagonals are
+    replicated anyway.
+    """
+    try:
+        if not batch_axes:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is None or not mesh.axis_names:
+                return x
+            batch_axes = tuple(a for a in ("pod", "data")
+                               if a in mesh.axis_names)
+        if not batch_axes:
+            return x
+        spec = [None] * x.ndim
+        spec[0] = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except Exception:  # outside a mesh context (tests, examples)
+        return x
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    n_in: int,
+    n_out: int,
+    cfg: ModelConfig,
+    role: str,
+) -> jax.Array:
+    if "sell" in params:
+        scfg = _sell_cfg(cfg, n_in, n_out)
+        if cfg.sell_local_features:
+            x = _batch_local_constraint(x, cfg.sell_batch_axes)
+        y = sell_mod.structured_linear(params["sell"], x, scfg)
+        if cfg.sell_local_features:
+            y = _batch_local_constraint(y, cfg.sell_batch_axes)
+        return y
+    return jnp.matmul(x, params["w"].astype(x.dtype))
+
+
+def linear_param_count(cfg: ModelConfig, role: str, n_in: int, n_out: int) -> int:
+    if uses_sell(cfg, role):
+        return _sell_cfg(cfg, n_in, n_out).param_count()
+    return n_in * n_out

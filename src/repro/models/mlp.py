@@ -1,0 +1,172 @@
+"""Gated MLP (SwiGLU/GeGLU) and Mixture-of-Experts feed-forward layers.
+
+The MoE path implements fine-grained expert FFNs with shared experts
+(DeepSeekMoE / Moonlight style: e.g. 64 routed top-6 + 2 shared) using the
+capacity-based einsum dispatch that shards cleanly under pjit:
+
+    router probs -> top-k -> position-in-expert -> dispatch one-hot
+    (tokens, E, C) -> expert matmuls (E, C, ...) -> combine
+
+Expert weights carry a leading E axis that the sharding rules map to the
+``model`` mesh axis (expert parallelism); the dispatch einsum lowers to an
+all-to-all under pjit.
+
+When ``sell_targets`` contains ``"expert"`` the per-expert FFN matrices are
+replaced by per-expert ACDC cascades (vmapped over E) — the paper's layer
+applied where the parameter mass of an MoE actually lives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import linear
+from repro.models.common import ModelConfig
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Dense gated MLP.
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None,
+             dtype=jnp.float32) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    rg, ru, rd = jax.random.split(rng, 3)
+    return {
+        "wg": linear.linear_init(rg, cfg.d_model, d_ff, cfg, "mlp_in", dtype),
+        "wu": linear.linear_init(ru, cfg.d_model, d_ff, cfg, "mlp_in", dtype),
+        "wd": linear.linear_init(rd, d_ff, cfg.d_model, cfg, "mlp_out", dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig,
+        d_ff: Optional[int] = None) -> jax.Array:
+    d_ff = d_ff or cfg.d_ff
+    g = linear.linear_apply(params["wg"], x, cfg.d_model, d_ff, cfg, "mlp_in")
+    u = linear.linear_apply(params["wu"], x, cfg.d_model, d_ff, cfg, "mlp_in")
+    h = _act(cfg.mlp_act)(g) * u
+    return linear.linear_apply(params["wd"], h, d_ff, cfg.d_model, cfg, "mlp_out")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts.
+# ---------------------------------------------------------------------------
+
+def init_moe(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    e = cfg.n_experts
+    rr, re, rs = jax.random.split(rng, 3)
+    p = {
+        "router": {"w": (cfg.d_model ** -0.5) * jax.random.normal(
+            rr, (cfg.d_model, e), dtype)},
+        # routed experts: stacked with leading E axis (expert-parallel)
+        "experts": jax.vmap(
+            lambda r: init_mlp(r, cfg, cfg.d_ff, dtype)
+        )(jax.random.split(re, e)),
+    }
+    if cfg.n_shared_experts > 0:
+        shared_ff = cfg.d_ff * cfg.n_shared_experts
+        p["shared"] = init_mlp(rs, cfg, shared_ff, dtype)
+    return p
+
+
+def _expert_ffn(wp: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """h: (E, C, D) with per-expert stacked weights."""
+    def one(w, hh):
+        return mlp(w, hh, cfg, cfg.d_ff)
+    return jax.vmap(one)(wp, h)
+
+
+def _route(xt: jax.Array, params: dict, cfg: ModelConfig):
+    """Shared router math -> (gate_vals, gate_idx, pos, keep, cap)."""
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * t * k / e), 1)
+    logits = jnp.matmul(xt.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                    # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)          # (T,k,E)
+    flat = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                   # (T, k)
+    keep = pos < cap                                                 # capacity drop
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    return gate_vals, gate_idx, pos.astype(jnp.int32), keep, cap, onehot
+
+
+def _moe_einsum(params, xt, cfg, gate_vals, gate_idx, pos, keep, cap,
+                onehot):
+    """Faithful GShard/Switch one-hot dispatch: O(T*E*C*d) einsums."""
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("tke,tkc->tec", onehot * gate_vals[..., None], pos_oh)
+    h = jnp.einsum("td,tec->ecd", xt.astype(jnp.float32), dispatch)
+    h = h.astype(xt.dtype)
+    y_exp = _expert_ffn(params["experts"], h, cfg)                   # (E, C, D)
+    y = jnp.einsum("ecd,tec->td", y_exp.astype(jnp.float32), combine)
+    return y.astype(xt.dtype)
+
+
+def _moe_scatter(params, xt, cfg, gate_vals, gate_idx, pos, keep, cap):
+    """Scatter/gather dispatch: O(T*k*d) data movement, no (T,E,C) tensors.
+
+    The one-hot dispatch einsum costs 2*T*E*C*d FLOPs — QUADRATIC in tokens
+    (C ~ T*k/E) and ~12x the useful expert FLOPs at the assigned MoE shapes
+    (baseline useful/HLO ratio 0.08, EXPERIMENTS.md section Perf hillclimb
+    #3).  Scatter-add into the (E*C, d) buffer and gather back are linear.
+    """
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dest = gate_idx * cap + pos                                     # (T, k)
+    dest = jnp.where(keep, dest, e * cap)                           # drop slot
+    buf = jnp.zeros((e * cap + 1, d), jnp.float32)
+    src = jnp.broadcast_to(xt.astype(jnp.float32)[:, None, :],
+                           (t, k, d)).reshape(-1, d)
+    buf = buf.at[dest.reshape(-1)].add(src)
+    h = buf[: e * cap].reshape(e, cap, d).astype(xt.dtype)
+    y_exp = _expert_ffn(params["experts"], h, cfg)                  # (E, C, D)
+    flat = jnp.concatenate(
+        [y_exp.reshape(e * cap, d).astype(jnp.float32),
+         jnp.zeros((1, d), jnp.float32)], axis=0)
+    gathered = flat[dest]                                           # (T, k, D)
+    y = jnp.sum(gathered * gate_vals[..., None], axis=1)
+    return y.astype(xt.dtype)
+
+
+def moe(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Capacity-based top-k dispatch."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gate_vals, gate_idx, pos, keep, cap, onehot = _route(xt, params, cfg)
+    if cfg.moe_impl == "scatter":
+        y = _moe_scatter(params, xt, cfg, gate_vals, gate_idx, pos, keep, cap)
+    else:
+        y = _moe_einsum(params, xt, cfg, gate_vals, gate_idx, pos, keep,
+                        cap, onehot)
+    y = y.reshape(b, s, d)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, cfg,
+                    cfg.d_ff * cfg.n_shared_experts)
+    return y
+
+
+def moe_aux_loss(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style f*P)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.matmul(xt.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,174 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block
+(arXiv:2411.15242).
+
+A single transformer block's parameters are reused at every ``attn_every``-th
+position in the Mamba2 stack (Zamba's parameter-sharing trick).  As in the
+paper, the shared block sees the concatenation of the current hidden state
+and the original embedding; we fold that through a 2d->d input projection.
+
+The structure composes with the ACDC SELL naturally: the shared block's
+projections and the mamba in/out projections both route through the SELL
+factory (shared structured weights = double savings).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import linear
+from repro.models import mamba2 as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models.common import (
+    ModelConfig,
+    cross_entropy,
+    embed_init,
+    embed_lookup,
+    init_rms_norm,
+    rms_norm,
+    unembed,
+)
+
+
+def _n_groups(cfg: ModelConfig):
+    k = cfg.attn_every
+    full, rem = divmod(cfg.n_layers, k)
+    sizes = [k] * full + ([rem] if rem else [])
+    return sizes
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = cfg.param_dtype
+    re, rl, rs, rp = jax.random.split(rng, 4)
+    layers = jax.vmap(lambda r: {
+        "norm": init_rms_norm(cfg.d_model, dtype),
+        "mixer": mamba_mod.init_mamba_block(r, cfg, dtype),
+    })(jax.random.split(rl, cfg.n_layers))
+    d = cfg.d_model
+    shared = {
+        "in_proj": linear.linear_init(rp, 2 * d, d, cfg, "shared_in", dtype),
+        "norm1": init_rms_norm(d, dtype),
+        "attn": attn_mod.init_attention(rs, cfg, dtype),
+        "norm2": init_rms_norm(d, dtype),
+        "mlp": mlp_mod.init_mlp(jax.random.fold_in(rs, 1), cfg, None, dtype),
+    }
+    return {
+        "embed": embed_init(re, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": init_rms_norm(cfg.d_model, dtype),
+    }
+
+
+def _shared_block(shared: dict, x: jax.Array, emb: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    d = cfg.d_model
+    h = linear.linear_apply(shared["in_proj"],
+                            jnp.concatenate([x, emb], axis=-1),
+                            2 * d, d, cfg, "shared_in")
+    a = rms_norm(h, shared["norm1"]["scale"], cfg.norm_eps)
+    window = jnp.zeros((), jnp.int32)  # full attention
+    h = h + attn_mod.attention(shared["attn"], a, positions, window, cfg)
+    m = rms_norm(h, shared["norm2"]["scale"], cfg.norm_eps)
+    h = h + mlp_mod.mlp(shared["mlp"], m, cfg)
+    return x + h
+
+
+def apply(params: dict, tokens: jax.Array, cfg: ModelConfig,
+          frontend_embeds=None) -> jax.Array:
+    dtype = cfg.compute_dtype
+    emb = embed_lookup(params["embed"], tokens, dtype)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    fn = mamba_mod._layer_fn
+    if cfg.remat:
+        fn = jax.checkpoint(mamba_mod._layer_fn,
+                            policy=jax.checkpoint_policies.nothing_saveable,
+                            static_argnums=(2,))
+
+    def body(carry, layer):
+        return fn(layer, carry, cfg), None
+
+    x = emb
+    start = 0
+    for size in _n_groups(cfg):
+        group = jax.tree.map(lambda p: p[start : start + size], params["layers"])
+        x, _ = jax.lax.scan(body, x, group, unroll=cfg.scan_unroll)
+        x = _shared_block(params["shared"], x, emb, positions, cfg)
+        start += size
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return unembed(params["embed"], x)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    logits = apply(params, batch["tokens"], cfg)
+    return cross_entropy(logits, batch["labels"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode: mamba states + KV caches for each shared-block application.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_apps = len(_n_groups(cfg))
+    cache = mamba_mod.init_ssm_cache(cfg, batch, cfg.n_layers, cfg.compute_dtype)
+    kv = attn_mod.init_kv_cache(cfg, batch, max_len, n_apps, cfg.compute_dtype)
+    cache["attn_k"] = kv["k"]
+    cache["attn_v"] = kv["v"]
+    return cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                position: jax.Array, cfg: ModelConfig):
+    dtype = cfg.compute_dtype
+    emb = embed_lookup(params["embed"], tokens[:, None], dtype)
+
+    def body(carry, xs):
+        x = carry
+        layer, ssm, conv = xs
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        out, ssm, conv = mamba_mod.mamba_block_decode(
+            layer["mixer"], h, ssm, conv, cfg)
+        return x + out, (ssm, conv)
+
+    x = emb
+    start = 0
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    window = jnp.zeros((), jnp.int32)
+    for app, size in enumerate(_n_groups(cfg)):
+        sl = lambda p: p[start : start + size]
+        group = (jax.tree.map(sl, params["layers"]),
+                 cache["ssm"][start : start + size],
+                 cache["conv"][start : start + size])
+        x, (ssm, conv) = jax.lax.scan(body, x, group,
+                                      unroll=cfg.scan_unroll)
+        new_ssm.append(ssm)
+        new_conv.append(conv)
+        # shared attention application `app`
+        d = cfg.d_model
+        h = linear.linear_apply(params["shared"]["in_proj"],
+                                jnp.concatenate([x, emb], axis=-1),
+                                2 * d, d, cfg, "shared_in")
+        a = rms_norm(h, params["shared"]["norm1"]["scale"], cfg.norm_eps)
+        out, ck, cv = attn_mod.attention_decode(
+            params["shared"]["attn"], a,
+            cache["attn_k"][app], cache["attn_v"][app],
+            position, window, cfg)
+        h = h + out
+        m = rms_norm(h, params["shared"]["norm2"]["scale"], cfg.norm_eps)
+        h = h + mlp_mod.mlp(params["shared"]["mlp"], m, cfg)
+        x = x + h
+        new_k.append(ck)
+        new_v.append(cv)
+        start += size
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "attn_k": jnp.stack(new_k, axis=0),
+        "attn_v": jnp.stack(new_v, axis=0),
+    }

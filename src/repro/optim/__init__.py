@@ -1,0 +1,22 @@
+"""Optimizers (no external deps): AdamW and SGD+momentum with param groups.
+
+The paper's CaffeNet recipe needs per-group treatment: learning-rate
+multipliers of x24 on the **A** diagonals and x12 on **D**, weight decay
+excluded from the SELL diagonals, and step-decay (x0.1 every 100k).  That is
+expressed here as path-regex param groups, the same mechanism the LM zoo
+uses to exclude norms/biases from decay.
+"""
+
+from repro.optim.optimizers import (  # noqa: F401
+    OptimizerConfig,
+    adamw,
+    sgd_momentum,
+    make_optimizer,
+    tree_paths,
+    global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    step_decay_schedule,
+)

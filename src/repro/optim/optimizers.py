@@ -1,0 +1,187 @@
+"""Functional optimizers with path-regex param groups.
+
+API (optax-like but dependency-free)::
+
+    opt = make_optimizer(OptimizerConfig(...), schedule)
+    opt_state = opt.init(params)
+    updates, opt_state = opt.update(grads, opt_state, params, step)
+    params = tree_add(params, updates)
+
+Param groups are (regex, overrides) pairs matched against "a/b/c" tree
+paths; the first match wins.  Supported overrides: ``lr_mult``,
+``weight_decay``.  The paper's recipe is then just::
+
+    groups = [(r".*sell/a$", {"lr_mult": 24.0, "weight_decay": 0.0}),
+              (r".*sell/d$", {"lr_mult": 12.0, "weight_decay": 0.0})]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities.
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree):
+    """Same-structure tree of 'a/b/c' path strings."""
+    return jax.tree_util.tree_map_with_path(lambda p, _: _path_str(p), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y.astype(x.dtype), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Config.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    momentum: float = 0.9            # sgd
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0           # global-norm clip; 0 = off
+    # (regex, {"lr_mult": float, "weight_decay": float}) — first match wins
+    groups: Tuple[Tuple[str, dict], ...] = ()
+    # keep first/second moments in bfloat16 (distributed-memory trick)
+    compact_state: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def _group_maps(cfg: OptimizerConfig, params):
+    paths = tree_paths(params)
+    compiled = [(re.compile(rx), ov) for rx, ov in cfg.groups]
+
+    def resolve(path, key, default):
+        for rx, ov in compiled:
+            if rx.search(path):
+                return ov.get(key, default)
+        return default
+
+    lr_mults = jax.tree.map(lambda p: resolve(p, "lr_mult", 1.0), paths)
+    wds = jax.tree.map(lambda p: resolve(p, "weight_decay", cfg.weight_decay),
+                       paths)
+    return lr_mults, wds
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+def adamw(cfg: OptimizerConfig, schedule: Callable) -> Optimizer:
+    state_dtype = jnp.bfloat16 if cfg.compact_state else jnp.float32
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        lr_mults, wds = _group_maps(cfg, params)
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if cfg.grad_clip > 0:
+            gn = global_norm(gf)
+            scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        new_m = jax.tree.map(
+            lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                          + (1 - cfg.b1) * g).astype(state_dtype),
+            state["m"], gf)
+        new_v = jax.tree.map(
+            lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                          + (1 - cfg.b2) * jnp.square(g)).astype(state_dtype),
+            state["v"], gf)
+
+        def upd(m, v, p, mult, wd):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            u = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            u = u + wd * p.astype(jnp.float32)
+            return (-lr * mult * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, new_m, new_v, params, lr_mults, wds)
+        return updates, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum (the paper's CaffeNet optimizer).
+# ---------------------------------------------------------------------------
+
+def sgd_momentum(cfg: OptimizerConfig, schedule: Callable) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                    params)}
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        lr_mults, wds = _group_maps(cfg, params)
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if cfg.grad_clip > 0:
+            gn = global_norm(gf)
+            scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+
+        # caffe-style: mom = mu*mom + lr_eff*(g + wd*p); p -= mom
+        def step_fn(mom, g, p, mult, wd):
+            g = g + wd * p.astype(jnp.float32)
+            return cfg.momentum * mom + lr * mult * g
+
+        new_mom = jax.tree.map(step_fn, state["mom"], gf, params,
+                               lr_mults, wds)
+        updates = jax.tree.map(lambda m, p: (-m).astype(p.dtype),
+                               new_mom, params)
+        return updates, {"mom": new_mom}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(cfg: OptimizerConfig, schedule: Callable) -> Optimizer:
+    if cfg.kind == "adamw":
+        return adamw(cfg, schedule)
+    if cfg.kind == "sgd":
+        return sgd_momentum(cfg, schedule)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (step -> lr scalars, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def step_decay_schedule(lr: float, decay: float = 0.1, every: int = 100_000):
+    """The paper's CaffeNet schedule: lr * decay^(floor(step/every))."""
+    def fn(step):
+        k = jnp.floor(step.astype(jnp.float32) / every)
+        return lr * (decay ** k)
+    return fn
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,9 @@
+"""Serving substrate (see also repro/launch/serve.py).
+
+The decode machinery lives with its models (KV caches in
+repro/models/attention.py, SSM state caches in repro/models/mamba2.py) and
+the step builder in repro/dist/steps.py; this package re-exports the
+public serving surface.
+"""
+
+from repro.dist.steps import make_serve_step  # noqa: F401

@@ -1,0 +1,138 @@
+"""ACDC layer tests: definition, cascades, init, paper gradient equations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acdc as A
+from repro.core import transforms as T
+
+
+def _rand_layer(n, seed=0, std=0.1):
+    r = np.random.RandomState(seed)
+    a = (1 + std * r.randn(n)).astype(np.float32)
+    d = (1 + std * r.randn(n)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(d)
+
+
+@pytest.mark.parametrize("n", [8, 32, 100, 256])
+@pytest.mark.parametrize("method", ["fft", "matmul"])
+def test_acdc_definition(n, method):
+    """y = ((x*a) C * d) C^T with the explicit orthonormal DCT matrix."""
+    a, d = _rand_layer(n, seed=n)
+    x = jnp.asarray(np.random.RandomState(1).randn(4, n).astype(np.float32))
+    c = np.asarray(T.dct_matrix(n))
+    want = ((np.asarray(x) * np.asarray(a)) @ c * np.asarray(d)) @ c.T
+    got = np.asarray(A.acdc(x, a, d, method=method))
+    np.testing.assert_allclose(got, want, atol=2e-4)
+
+
+def test_acdc_bias_on_d():
+    n = 16
+    a, d = _rand_layer(n)
+    bias = jnp.asarray(np.random.RandomState(2).randn(n).astype(np.float32))
+    x = jnp.ones((2, n))
+    c = np.asarray(T.dct_matrix(n))
+    want = ((np.asarray(x) * np.asarray(a)) @ c * np.asarray(d)
+            + np.asarray(bias)) @ c.T
+    np.testing.assert_allclose(np.asarray(A.acdc(x, a, d, bias)), want,
+                               atol=1e-5)
+
+
+@given(st.integers(4, 64), st.integers(1, 5), st.integers(0, 999))
+@settings(max_examples=25, deadline=None)
+def test_cascade_equals_dense_equivalent(n, k, seed):
+    """Property: a linear ACDC_K cascade acts as one dense matrix."""
+    cfg = A.ACDCConfig(n=n, k=k, bias=False)
+    p = A.init_acdc_params(jax.random.PRNGKey(seed), cfg)
+    w = np.asarray(A.acdc_cascade_dense_equivalent(p, cfg))
+    x = np.random.RandomState(seed).randn(3, n).astype(np.float32)
+    got = np.asarray(A.acdc_cascade(p, jnp.asarray(x), cfg))
+    np.testing.assert_allclose(x @ w, got, atol=5e-3)
+
+
+def test_cascade_composition():
+    """ACDC_2(x) == ACDC_1(ACDC_1(x)) with matching per-layer params."""
+    n = 32
+    cfg2 = A.ACDCConfig(n=n, k=2)   # bias-on-D enabled (default)
+    p = A.init_acdc_params(jax.random.PRNGKey(3), cfg2)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, n).astype(np.float32))
+    y2 = A.acdc_cascade(p, x, cfg2)
+    y_manual = A.acdc(A.acdc(x, p["a"][0], p["d"][0], p["bias"][0]),
+                      p["a"][1], p["d"][1], p["bias"][1])
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_manual), atol=1e-5)
+
+
+def test_identity_init_is_near_identity():
+    """Paper init N(1, sigma^2): at sigma->0 the layer is the identity
+    (A=D=I and C C^T = I)."""
+    n = 64
+    cfg = A.ACDCConfig(n=n, k=4, init_std=0.0, bias=False)
+    p = A.init_acdc_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.RandomState(0).randn(3, n).astype(np.float32))
+    y = A.acdc_cascade(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+def test_first_a_identity_convention():
+    cfg = A.ACDCConfig(n=16, k=3, first_a_identity=True, bias=False)
+    p = A.init_acdc_params(jax.random.PRNGKey(1), cfg)
+    np.testing.assert_allclose(np.asarray(p["a"][0]), np.ones(16))
+
+
+def test_paper_gradients_eq10_to_14():
+    """Backward formulas (10)-(14) against autodiff."""
+    n = 24
+    a, d = _rand_layer(n, seed=5)
+    x = jnp.asarray(np.random.RandomState(6).randn(3, n).astype(np.float32))
+    g = jnp.asarray(np.random.RandomState(7).randn(3, n).astype(np.float32))
+
+    def f(x, a, d):
+        return jnp.sum(A.acdc(x, a, d) * g)   # dL/dy = g
+
+    gx, ga, gd = jax.grad(f, argnums=(0, 1, 2))(x, a, d)
+    c = np.asarray(T.dct_matrix(n))
+    xn, an, dn, gn = map(np.asarray, (x, a, d, g))
+    gc = gn @ c                                   # g C
+    h2 = (xn * an) @ c
+    want_d = (h2 * gc).sum(0)                     # eq. 10
+    dh1 = (gc * dn) @ c.T
+    want_a = (xn * dh1).sum(0)                    # eq. 12
+    want_x = an * dh1                             # eq. 14
+    np.testing.assert_allclose(np.asarray(gd), want_d, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ga), want_a, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx), want_x, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_in,n_out", [(10, 20), (32, 16), (100, 100)])
+def test_rectangular_pad_truncate(n_in, n_out):
+    n = A.rectangular_size(n_in, n_out)
+    cfg = A.ACDCConfig(n=n, k=2)
+    p = A.init_acdc_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((5, n_in))
+    y = A.acdc_rectangular(p, x, cfg, n_in, n_out)
+    assert y.shape == (5, n_out)
+    # consistency with explicit pad+truncate
+    xp = jnp.pad(x, ((0, 0), (0, n - n_in)))
+    want = A.acdc_cascade(p, xp, cfg)[..., :n_out]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+
+
+def test_rectangular_size_lane_alignment():
+    assert A.rectangular_size(100, 60) == 100
+    assert A.rectangular_size(100, 60, multiple=128) == 128
+    assert A.rectangular_size(2048, 6144, multiple=128) == 6144
+
+
+def test_relu_permute_cascade_shapes_and_nonlinearity():
+    n = 32
+    cfg = A.ACDCConfig(n=n, k=3, relu=True, permute=True)
+    p = A.init_acdc_params(jax.random.PRNGKey(2), cfg)
+    x = jnp.asarray(np.random.RandomState(1).randn(4, n).astype(np.float32))
+    y1 = A.acdc_cascade(p, x, cfg)
+    y2 = A.acdc_cascade(p, -x, cfg)
+    assert y1.shape == x.shape
+    # ReLU breaks oddness: f(-x) != -f(x)  (a linear cascade would be odd)
+    assert float(jnp.abs(y2 + y1).max()) > 1e-3

@@ -1,0 +1,75 @@
+"""Data pipeline: determinism, shardability, learnable structure, specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM, make_batch_specs
+
+
+def test_deterministic_across_calls():
+    p = SyntheticLM(DataConfig(vocab_size=100, seq_len=32, global_batch=4))
+    b1 = p.batch_at(7)
+    b2 = p.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_different_steps_differ():
+    p = SyntheticLM(DataConfig(vocab_size=100, seq_len=32, global_batch=4))
+    assert not np.array_equal(np.asarray(p.batch_at(0)["tokens"]),
+                              np.asarray(p.batch_at(1)["tokens"]))
+
+
+def test_shards_partition_global_batch():
+    p = SyntheticLM(DataConfig(vocab_size=100, seq_len=16, global_batch=8))
+    full = p.batch_at(3)
+    parts = [p.shard_at(3, i, 4) for i in range(4)]
+    rebuilt = np.concatenate([np.asarray(q["tokens"]) for q in parts], axis=0)
+    np.testing.assert_array_equal(rebuilt, np.asarray(full["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    p = SyntheticLM(DataConfig(vocab_size=50, seq_len=16, global_batch=2))
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+    assert bool((b["labels"][:, -1] == -1).all())
+
+
+def test_tokens_in_range():
+    cfg = DataConfig(vocab_size=37, seq_len=64, global_batch=4)
+    b = SyntheticLM(cfg).batch_at(11)
+    t = np.asarray(b["tokens"])
+    assert t.min() >= 0 and t.max() < 37
+
+
+def test_markov_structure_is_learnable():
+    """~half of next-tokens are the deterministic map of the previous one."""
+    cfg = DataConfig(vocab_size=1000, seq_len=512, global_batch=4)
+    b = SyntheticLM(cfg).batch_at(0)
+    t = np.asarray(b["tokens"]).astype(np.uint32)
+    det = (t[:, :-1] * np.uint32(2654435761) + np.uint32(12345)) % np.uint32(1000)
+    frac = (det == t[:, 1:]).mean()
+    # one vectorized rewrite pass: a transition survives as deterministic
+    # when coin_i is True AND token i itself was not rewritten (~0.25)
+    assert 0.15 < frac < 0.5, frac
+
+
+def test_frontend_stub_shapes():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=2,
+                     frontend="vision", n_frontend_tokens=8, d_model=16)
+    b = SyntheticLM(cfg).batch_at(0)
+    assert b["frontend_embeds"].shape == (2, 8, 16)
+    # vision prefix positions are masked out of the loss
+    assert bool((b["labels"][:, :8] == -1).all())
+
+
+def test_batch_specs_match_real_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=2,
+                     frontend="audio", n_frontend_tokens=8, d_model=16)
+    spec = make_batch_specs(cfg)
+    real = SyntheticLM(cfg).batch_at(0)
+    for k, s in spec.items():
+        assert real[k].shape == s.shape, k
+        assert real[k].dtype == s.dtype, k

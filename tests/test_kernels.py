@@ -1,0 +1,143 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes, plus custom-VJP correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms as T
+from repro.kernels import ops, ref
+from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import scaled_matmul as smm_mod
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+SHAPES = [(4, 128), (17, 128), (128, 256), (100, 512), (256, 1024)]
+
+
+@pytest.mark.parametrize("m,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_acdc_fused_vs_oracle(m, n, dtype):
+    r = jax.random.PRNGKey(m * 1000 + n)
+    x = jax.random.normal(r, (m, n), dtype)
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,), dtype)
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,), dtype)
+    b = 0.1 * jax.random.normal(jax.random.fold_in(r, 3), (n,), dtype)
+    got = ops.acdc_fused_op(x, a, d, b)
+    want = ref.acdc_fused_ref(x, a, d, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=_tol(dtype) * np.sqrt(n), rtol=1e-2)
+
+
+def test_acdc_fused_two_call_path():
+    """N > MAX_FUSED_N exercises the chained scaled-matmul implementation."""
+    n = fused_mod.MAX_FUSED_N * 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (n,))
+    b = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (n,))
+    got = ops.acdc_fused_op(x, a, d, b)
+    want = ref.acdc_fused_ref(x, a, d, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_acdc_fused_no_bias_and_nd_batch():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 128))
+    a = jnp.ones((128,))
+    d = jnp.ones((128,))
+    got = ops.acdc_fused_op(x, a, d, None)
+    want = ref.acdc_fused_ref(x, a, d, None)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_acdc_custom_vjp_matches_autodiff_of_oracle():
+    m, n = 16, 256
+    r = jax.random.PRNGKey(9)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    b = 0.1 * jax.random.normal(jax.random.fold_in(r, 3), (n,))
+
+    def lk(x, a, d, b):
+        return jnp.sum(jnp.tanh(ops.acdc_fused_op(x, a, d, b)))
+
+    def lr(x, a, d, b):
+        return jnp.sum(jnp.tanh(ref.acdc_fused_ref(x, a, d, b)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2, 3))(x, a, d, b)
+    gr = jax.grad(lr, argnums=(0, 1, 2, 3))(x, a, d, b)
+    for name, k, r_ in zip("xadb", gk, gr):
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r_),
+                                   atol=2e-4, rtol=1e-3, err_msg=name)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (64, 256, 512),
+                                   (100, 300, 200), (33, 65, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scaled_matmul_vs_oracle(m, k, n, dtype):
+    r = jax.random.PRNGKey(m + k + n)
+    x = jax.random.normal(r, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(r, 1), (k, n), dtype)
+    pre = jax.random.normal(jax.random.fold_in(r, 2), (k,), dtype)
+    post = jax.random.normal(jax.random.fold_in(r, 3), (n,), dtype)
+    bias = jax.random.normal(jax.random.fold_in(r, 4), (n,), dtype)
+    got = ops.scaled_matmul(x, w, pre, post, bias)
+    want = ref.scaled_matmul_ref(x, w, pre, post, bias)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=_tol(dtype) * np.sqrt(k) * 4, rtol=2e-2)
+
+
+@pytest.mark.parametrize("opts", [
+    dict(), dict(pre=True), dict(post=True), dict(bias=True),
+    dict(pre=True, post=True, bias=True),
+])
+def test_scaled_matmul_optional_operands(opts):
+    m, k, n = 16, 64, 96
+    r = jax.random.PRNGKey(0)
+    x = jax.random.normal(r, (m, k))
+    w = jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    pre = jax.random.normal(jax.random.fold_in(r, 2), (k,)) if opts.get("pre") else None
+    post = jax.random.normal(jax.random.fold_in(r, 3), (n,)) if opts.get("post") else None
+    bias = jax.random.normal(jax.random.fold_in(r, 4), (n,)) if opts.get("bias") else None
+    got = ops.scaled_matmul(x, w, pre, post, bias)
+    want = ref.scaled_matmul_ref(x, w, pre, post, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-4)
+
+
+@given(st.integers(1, 64), st.sampled_from([128, 256, 384]),
+       st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_acdc_kernel_property_sweep(m, n, seed):
+    r = jax.random.PRNGKey(seed)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.05 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.05 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    got = ops.acdc_fused_op(x, a, d, None)
+    want = ref.acdc_fused_ref(x, a, d, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_kernel_agrees_with_core_acdc():
+    """core.acdc(method='pallas') routes through the kernel and matches
+    the fft/matmul methods."""
+    from repro.core import acdc as A
+    n = 256
+    r = jax.random.PRNGKey(4)
+    x = jax.random.normal(r, (6, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    yp = A.acdc(x, a, d, method="pallas")
+    yf = A.acdc(x, a, d, method="fft")
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yf),
+                               atol=1e-4, rtol=1e-4)

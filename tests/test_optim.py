@@ -1,0 +1,118 @@
+"""Optimizer tests: AdamW/SGD mechanics, param groups, the paper's lr
+multipliers, schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (OptimizerConfig, constant_schedule, cosine_schedule,
+                         make_optimizer, step_decay_schedule)
+from repro.optim.optimizers import tree_add
+
+
+def _params():
+    return {
+        "layer": {"sell": {"a": jnp.ones((4,)), "d": jnp.ones((4,))},
+                  "w": jnp.ones((4, 4))},
+        "norm": {"scale": jnp.ones((4,))},
+    }
+
+
+def test_adamw_descends_quadratic():
+    opt = make_optimizer(OptimizerConfig(lr=0.1, weight_decay=0.0),
+                         constant_schedule(0.1))
+    p = {"x": jnp.asarray([3.0, -2.0])}
+    s = opt.init(p)
+    for i in range(200):
+        g = {"x": 2 * p["x"]}
+        u, s = opt.update(g, s, p, jnp.asarray(i))
+        p = tree_add(p, u)
+    assert float(jnp.abs(p["x"]).max()) < 1e-2
+
+
+def test_sgd_momentum_matches_caffe_formula():
+    cfg = OptimizerConfig(kind="sgd", lr=0.1, momentum=0.9, weight_decay=0.0,
+                          grad_clip=0.0)
+    opt = make_optimizer(cfg, constant_schedule(0.1))
+    p = {"x": jnp.asarray([1.0])}
+    s = opt.init(p)
+    g = {"x": jnp.asarray([1.0])}
+    u1, s = opt.update(g, s, p, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(u1["x"]), [-0.1], atol=1e-6)
+    u2, s = opt.update(g, s, p, jnp.asarray(1))
+    # mom = 0.9*0.1 + 0.1 = 0.19
+    np.testing.assert_allclose(np.asarray(u2["x"]), [-0.19], atol=1e-6)
+
+
+def test_paper_lr_multiplier_groups():
+    """x24 on A, x12 on D, x1 elsewhere (paper section 6.2)."""
+    groups = ((r"sell/a$", {"lr_mult": 24.0, "weight_decay": 0.0}),
+              (r"sell/d$", {"lr_mult": 12.0, "weight_decay": 0.0}))
+    cfg = OptimizerConfig(kind="sgd", lr=1.0, momentum=0.0, weight_decay=0.0,
+                          grad_clip=0.0, groups=groups)
+    opt = make_optimizer(cfg, constant_schedule(1.0))
+    p = _params()
+    s = opt.init(p)
+    g = jax.tree.map(jnp.ones_like, p)
+    u, _ = opt.update(g, s, p, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(u["layer"]["sell"]["a"]),
+                               -24.0 * np.ones(4), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u["layer"]["sell"]["d"]),
+                               -12.0 * np.ones(4), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(u["layer"]["w"]),
+                               -1.0 * np.ones((4, 4)), atol=1e-5)
+
+
+def test_weight_decay_exclusion():
+    groups = ((r"sell/|norm", {"weight_decay": 0.0}),)
+    cfg = OptimizerConfig(lr=0.0, weight_decay=0.5, grad_clip=0.0,
+                          groups=groups)
+    opt = make_optimizer(cfg, constant_schedule(0.0))
+    # with lr=0 nothing moves regardless; instead verify via update values
+    cfg = OptimizerConfig(lr=1.0, b1=0.0, b2=0.0, eps=1e-9,
+                          weight_decay=0.5, grad_clip=0.0, groups=groups)
+    opt = make_optimizer(cfg, constant_schedule(1.0))
+    p = _params()
+    s = opt.init(p)
+    g = jax.tree.map(jnp.zeros_like, p)
+    u, _ = opt.update(g, s, p, jnp.asarray(0))
+    # zero grads: update = -lr * wd * p for decayed leaves, 0 for excluded
+    assert float(jnp.abs(u["layer"]["sell"]["a"]).max()) < 1e-6
+    assert float(jnp.abs(u["norm"]["scale"]).max()) < 1e-6
+    np.testing.assert_allclose(np.asarray(u["layer"]["w"]),
+                               -0.5 * np.ones((4, 4)), atol=1e-5)
+
+
+def test_grad_clip_global_norm():
+    cfg = OptimizerConfig(kind="sgd", lr=1.0, momentum=0.0,
+                          weight_decay=0.0, grad_clip=1.0)
+    opt = make_optimizer(cfg, constant_schedule(1.0))
+    p = {"x": jnp.zeros((3,))}
+    s = opt.init(p)
+    g = {"x": jnp.asarray([30.0, 40.0, 0.0])}  # norm 50 -> scaled by 1/50
+    u, _ = opt.update(g, s, p, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(u["x"]), [-0.6, -0.8, 0.0],
+                               atol=1e-5)
+
+
+def test_step_decay_schedule_paper():
+    sch = step_decay_schedule(0.1, decay=0.1, every=100)
+    assert abs(float(sch(jnp.asarray(0))) - 0.1) < 1e-6
+    assert abs(float(sch(jnp.asarray(99))) - 0.1) < 1e-6
+    assert abs(float(sch(jnp.asarray(100))) - 0.01) < 1e-6
+    assert abs(float(sch(jnp.asarray(250))) - 0.001) < 1e-6
+
+
+def test_cosine_schedule_monotone_warmup():
+    sch = cosine_schedule(1.0, warmup=10, total=100)
+    vals = [float(sch(jnp.asarray(i))) for i in range(15)]
+    assert vals[0] < vals[5] < vals[9]
+    assert abs(vals[10] - 1.0) < 0.05
+
+
+def test_compact_state_bf16():
+    cfg = OptimizerConfig(compact_state=True)
+    opt = make_optimizer(cfg, constant_schedule(1e-3))
+    s = opt.init({"x": jnp.zeros((4,), jnp.float32)})
+    assert s["m"]["x"].dtype == jnp.bfloat16
+    assert s["v"]["x"].dtype == jnp.bfloat16

@@ -1,0 +1,142 @@
+"""Equivalence tests for the performance-optimized implementations
+(EXPERIMENTS.md section Perf): chunked attention == vanilla, one-hot CE ==
+gather CE, scatter MoE == einsum MoE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import get_model
+from repro.models.common import ModelConfig, cross_entropy
+
+
+def _cfg(**kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                vocab_size=101, dtype="float32")
+    return ModelConfig(**{**base, **kw})
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (8, 0.0), (0, 30.0),
+                                            (5, 20.0)])
+def test_chunked_attention_equals_vanilla(window, softcap):
+    from repro.models import attention as attn_mod
+    cfg_v = _cfg(attn_impl="vanilla", sliding_window=window,
+                 attn_logit_softcap=softcap)
+    cfg_c = dataclasses.replace(cfg_v, attn_impl="chunked", attn_chunk=8)
+    rng = jax.random.PRNGKey(0)
+    params = attn_mod.init_attention(rng, cfg_v)
+    b, s = 2, 37   # deliberately not a multiple of the chunk
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, 64))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    w = jnp.asarray(window, jnp.int32)
+    yv = attn_mod.attention(params, x, pos, w, cfg_v)
+    yc = attn_mod.attention(params, x, pos, w, cfg_c)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yv),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_chunked_attention_grads_match():
+    from repro.models import attention as attn_mod
+    cfg_v = _cfg(attn_impl="vanilla")
+    cfg_c = dataclasses.replace(cfg_v, attn_impl="chunked", attn_chunk=8)
+    rng = jax.random.PRNGKey(3)
+    params = attn_mod.init_attention(rng, cfg_v)
+    x = jax.random.normal(rng, (1, 16, 64))
+    pos = jnp.arange(16, dtype=jnp.int32)[None]
+    w = jnp.zeros((), jnp.int32)
+
+    def loss(p, cfg):
+        return jnp.sum(attn_mod.attention(p, x, pos, w, cfg) ** 2)
+
+    gv = jax.grad(loss)(params, cfg_v)
+    gc = jax.grad(loss)(params, cfg_c)
+    for a, b in zip(jax.tree.leaves(gv), jax.tree.leaves(gc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=1e-3)
+
+
+def test_onehot_ce_equals_gather_ce():
+    rng = jax.random.PRNGKey(1)
+    logits = jax.random.normal(rng, (4, 16, 101))
+    labels = jax.random.randint(jax.random.fold_in(rng, 1), (4, 16), 0, 101)
+    labels = labels.at[:, -1].set(-1)  # masked tail
+    lg = cross_entropy(logits, labels, _cfg(ce_impl="gather"))
+    lo = cross_entropy(logits, labels, _cfg(ce_impl="onehot"))
+    np.testing.assert_allclose(float(lg), float(lo), atol=1e-5)
+
+
+def test_onehot_ce_grads_match():
+    rng = jax.random.PRNGKey(2)
+    logits = jax.random.normal(rng, (2, 8, 33))
+    labels = jax.random.randint(jax.random.fold_in(rng, 1), (2, 8), 0, 33)
+    gg = jax.grad(lambda l: cross_entropy(l, labels, _cfg(ce_impl="gather")))(logits)
+    go = jax.grad(lambda l: cross_entropy(l, labels, _cfg(ce_impl="onehot")))(logits)
+    np.testing.assert_allclose(np.asarray(gg), np.asarray(go),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_scatter_moe_equals_einsum_moe():
+    from repro.models import mlp as mlp_mod
+    cfg_e = _cfg(n_experts=8, n_shared_experts=1, top_k=2,
+                 capacity_factor=8.0)  # big capacity: no drops -> exact
+    cfg_s = dataclasses.replace(cfg_e, moe_impl="scatter")
+    rng = jax.random.PRNGKey(5)
+    params = mlp_mod.init_moe(rng, cfg_e)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 16, 64))
+    ye = mlp_mod.moe(params, x, cfg_e)
+    ys = mlp_mod.moe(params, x, cfg_s)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ye),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scatter_moe_with_drops_matches_einsum():
+    """Tight capacity: both impls drop the SAME slots."""
+    from repro.models import mlp as mlp_mod
+    cfg_e = _cfg(n_experts=4, top_k=2, capacity_factor=0.5)
+    cfg_s = dataclasses.replace(cfg_e, moe_impl="scatter")
+    rng = jax.random.PRNGKey(6)
+    params = mlp_mod.init_moe(rng, cfg_e)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 32, 64))
+    ye = mlp_mod.moe(params, x, cfg_e)
+    ys = mlp_mod.moe(params, x, cfg_s)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ye),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_scatter_moe_grads_match():
+    from repro.models import mlp as mlp_mod
+    cfg_e = _cfg(n_experts=4, top_k=2, capacity_factor=4.0)
+    cfg_s = dataclasses.replace(cfg_e, moe_impl="scatter")
+    rng = jax.random.PRNGKey(7)
+    params = mlp_mod.init_moe(rng, cfg_e)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 8, 64))
+
+    def loss(p, cfg):
+        return jnp.sum(mlp_mod.moe(p, x, cfg) ** 2)
+
+    ge = jax.grad(loss)(params, cfg_e)
+    gs = jax.grad(loss)(params, cfg_s)
+    for a, b in zip(jax.tree.leaves(ge), jax.tree.leaves(gs)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_full_model_with_all_optimizations():
+    """A model with every perf knob on trains one step, finite loss."""
+    cfg = dataclasses.replace(
+        registry.get_smoke_config("deepseek_moe_16b"),
+        attn_impl="chunked", attn_chunk=8, ce_impl="onehot",
+        moe_impl="scatter")
+    m = get_model(cfg)
+    p = m.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    loss = m.loss_fn(p, {"tokens": toks, "labels": toks}, cfg)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda pp: m.loss_fn(pp, {"tokens": toks, "labels": toks},
+                                      cfg))(p)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))

@@ -1,0 +1,66 @@
+"""Paper section 6.1 (fast version): ACDC cascades approximate a dense
+linear operator by SGD, and the identity+noise init matters.
+
+The full Figure-3 sweep lives in examples/linear_recovery.py and
+benchmarks/bench_fig3_recovery.py; here we assert the two qualitative
+claims on a reduced budget so CI stays fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import acdc as A
+
+
+def _problem(n=16, m=2000, seed=0):
+    r = np.random.RandomState(seed)
+    x = r.rand(m, n).astype(np.float32)
+    w = r.rand(n, n).astype(np.float32)
+    y = x @ w + 1e-2 * r.randn(m, n).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(w)
+
+
+def _train(cfg, x, y, steps=400, lr=3e-2, seed=0):
+    """Adam via the scan-compiled Fig-3 trainer (fast + depth-stable)."""
+    from benchmarks import bench_fig3_recovery as fig3
+    loss, _ = fig3.train(cfg, x, y, steps=steps, lr0=lr, seed=seed)
+    return loss
+
+
+def test_deeper_cascade_approximates_better():
+    """Figure 3 left, reduced budget: loss improves monotonically-ish in K.
+
+    (Reaching the noise floor needs the full benchmark budget — see
+    benchmarks/bench_fig3_recovery.py; CI asserts the ordering claim.)
+    """
+    x, y, w = _problem()
+    l1 = _train(A.ACDCConfig(n=16, k=1, bias=False), x, y)
+    l8 = _train(A.ACDCConfig(n=16, k=8, bias=False), x, y,
+                steps=600, lr=1e-2)
+    assert l8 < 0.8 * l1, (l1, l8)
+
+
+def test_identity_init_beats_standard_init_when_deep():
+    """Figure 3 right: N(1, 0.1) trains at depth; N(0, sigma) collapses."""
+    x, y, w = _problem()
+    good = _train(A.ACDCConfig(n=16, k=8, bias=False,
+                               init_mean=1.0, init_std=0.1), x, y,
+                  steps=600, lr=1e-2)
+    bad = _train(A.ACDCConfig(n=16, k=8, bias=False,
+                              init_mean=0.0, init_std=1e-3), x, y,
+                 steps=600, lr=1e-2)
+    assert good < bad / 2, (good, bad)
+
+
+def test_k1_exactly_representable_operator_is_recovered():
+    """If W_true IS an ACDC operator, K=1 recovery reaches ~zero loss."""
+    n = 16
+    cfg = A.ACDCConfig(n=n, k=1, bias=False)
+    p_true = A.init_acdc_params(jax.random.PRNGKey(7), cfg)
+    r = np.random.RandomState(0)
+    x = jnp.asarray(r.rand(2000, n).astype(np.float32))
+    y = A.acdc_cascade(p_true, x, cfg)
+    l = _train(cfg, x, y, steps=600, lr=5e-2, seed=1)
+    assert l < 1e-3, l

@@ -1,0 +1,100 @@
+"""SELL zoo tests: every baseline the paper compares against."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sell as S
+
+KINDS = ["dense", "low_rank", "circulant", "fastfood", "acdc", "afdf"]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_in,n_out", [(16, 16), (24, 40), (64, 32)])
+def test_shapes_and_finite(kind, n_in, n_out):
+    cfg = S.SellConfig(kind=kind, n_in=n_in, n_out=n_out, k=2, rank=4)
+    p = S.init_sell_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, n_in))
+    y = S.structured_linear(p, x, cfg)
+    assert y.shape == (5, n_out)
+    mag = jnp.abs(y) if kind == "afdf" else y
+    assert bool(jnp.isfinite(mag).all())
+
+
+@pytest.mark.parametrize("kind", ["low_rank", "circulant", "fastfood", "acdc"])
+def test_linearity(kind):
+    cfg = S.SellConfig(kind=kind, n_in=32, n_out=32, k=2, rank=4, bias=False)
+    p = S.init_sell_params(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 32))
+    w = S.sell_dense_equivalent(p, cfg)
+    got = S.structured_linear(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(x @ w), np.asarray(got), atol=1e-4)
+
+
+def test_circulant_structure():
+    """The learned operator is exactly diag(a) @ circulant(c)."""
+    n = 16
+    cfg = S.SellConfig(kind="circulant", n_in=n, n_out=n, bias=False)
+    p = S.init_sell_params(jax.random.PRNGKey(5), cfg)
+    c = np.asarray(p["c"])
+    R = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(n):
+            R[i, j] = c[(j - i) % n]
+    w = np.asarray(S.sell_dense_equivalent(p, cfg))
+    np.testing.assert_allclose(w, np.diag(np.asarray(p["a"])) @ R, atol=1e-5)
+
+
+def test_param_counts_scale_linearly():
+    """SELL kinds are O(N); dense is O(N^2) (the paper's core claim)."""
+    for n in [64, 128, 256]:
+        dense = S.SellConfig(kind="dense", n_in=n, n_out=n).param_count()
+        acdc = S.SellConfig(kind="acdc", n_in=n, n_out=n, k=2).param_count()
+        ff = S.SellConfig(kind="fastfood", n_in=n, n_out=n).param_count()
+        circ = S.SellConfig(kind="circulant", n_in=n, n_out=n).param_count()
+        assert dense == n * n + n
+        assert acdc == 2 * 3 * n            # k=2 x (a, d, bias)
+        assert ff == 3 * n + n
+        assert circ == 2 * n + n
+        assert acdc < dense / 8
+
+
+def test_param_count_matches_actual_tree():
+    for kind in KINDS:
+        cfg = S.SellConfig(kind=kind, n_in=48, n_out=48, k=3, rank=8)
+        p = S.init_sell_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+        assert actual == cfg.param_count(), (kind, actual, cfg.param_count())
+
+
+def test_afdf_theory_object_is_complex_composition():
+    """AFDF_K == K-fold x -> ifft(fft(x*a)*d) (section 3 object)."""
+    n = 8
+    cfg = S.SellConfig(kind="afdf", n_in=n, n_out=n, k=2, bias=False)
+    p = S.init_sell_params(jax.random.PRNGKey(1), cfg)
+    x = np.random.RandomState(0).randn(2, n).astype(np.float32)
+    h = x.astype(np.complex64)
+    for i in range(2):
+        a = np.asarray(p["a_re"][i]) + 1j * np.asarray(p["a_im"][i])
+        d = np.asarray(p["d_re"][i]) + 1j * np.asarray(p["d_im"][i])
+        h = np.fft.ifft(np.fft.fft(h * a, axis=-1) * d, axis=-1)
+    got = np.asarray(S.structured_linear(p, jnp.asarray(x), cfg))
+    np.testing.assert_allclose(got, h, atol=1e-4)
+
+
+@given(st.sampled_from(["acdc", "circulant", "fastfood"]),
+       st.integers(4, 64), st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_gradients_finite_property(kind, n, seed):
+    cfg = S.SellConfig(kind=kind, n_in=n, n_out=n, k=2)
+    p = S.init_sell_params(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, n))
+
+    def loss(p):
+        return jnp.sum(S.structured_linear(p, x, cfg) ** 2)
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf).all())

@@ -1,0 +1,110 @@
+"""Sharding rule resolution: divisibility fallbacks, axis uniqueness,
+param/batch/cache spec construction."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as S
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def spec(mesh, shape, logical):
+    return S.spec_for(mesh, shape, logical)
+
+
+def test_spec_basic(mesh):
+    assert spec(mesh, (64, 128), ("embed", "ffn")) == P("data", "model")
+
+
+def test_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 7 is not divisible by any >1 axis... with size-1 axes everything
+    # divides; use a synthetic check through the public helper instead:
+    s = S.spec_for(mesh, (7, 128), ("embed", "ffn"))
+    assert s == P("data", "model")  # size-1 axes always divide
+
+
+def test_spec_axis_uniqueness(mesh):
+    # expert weights: (E, D, F) with expert->model first claims "model";
+    # ffn (also model) must be dropped.
+    s = S.spec_for(mesh, (64, 128, 256), ("expert", "embed", "ffn"))
+    assert s == P("model", "data", None)
+
+
+def test_spec_leading_dims_unsharded(mesh):
+    # stacked layer params: rule covers trailing dims only
+    s = S.spec_for(mesh, (12, 64, 128), ("embed", "ffn"))
+    assert s == P(None, "data", "model")
+
+
+def test_param_specs_on_model_tree(mesh):
+    from repro.configs import registry
+    from repro.models import get_model
+    import functools
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    model = get_model(cfg)
+    abs_params = jax.eval_shape(
+        functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
+    specs = S.param_specs(abs_params, mesh)
+    assert specs["embed"]["table"] == P("model", "data")
+    assert specs["layers"]["attn"]["wq"]["w"] == P(None, "data", "model")
+    assert specs["layers"]["mlp"]["wd"]["w"] == P(None, "model", "data")
+    assert specs["final_norm"]["scale"] == P(None)
+
+
+def test_sell_params_zero3_sharded(mesh):
+    import dataclasses, functools
+    from repro.configs import registry
+    from repro.models import get_model
+    cfg = dataclasses.replace(registry.get_smoke_config("qwen3_1_7b"),
+                              sell_kind="acdc")
+    model = get_model(cfg)
+    abs_params = jax.eval_shape(
+        functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
+    specs = S.param_specs(abs_params, mesh)
+    # (L, K, N) stacked diagonals -> N over "data" (the "sell" logical axis)
+    assert specs["layers"]["attn"]["wo"]["sell"]["a"] == P(None, None, "data")
+
+
+def test_batch_and_data_specs():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    specs = S.data_specs(mesh, batch)
+    assert specs["tokens"] == P(("data",), None) or specs["tokens"] == P("data", None)
+
+
+def test_multi_pod_batch_axes():
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    specs = S.data_specs(mesh, batch)
+    assert specs["tokens"][0] == ("pod", "data")
+
+
+def test_cache_specs_heads_divisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cache = {"k": jax.ShapeDtypeStruct((4, 8, 128, 16, 32), jnp.bfloat16)}
+    specs = S.cache_specs(cache, mesh)
+    assert specs["k"] == P(None, ("data",), None, "model", None) or \
+        specs["k"][3] == "model"
+
+
+def test_cache_specs_seq_fallback_when_batch_unshardable():
+    """batch=1 long-context: sequence axis takes the data shards."""
+    mesh = jax.sharding.AbstractMesh((2, 1), ("data", "model"))
+    cache = {"k": jax.ShapeDtypeStruct((4, 1, 128, 16, 32), jnp.bfloat16)}
+    specs = S.cache_specs(cache, mesh)
+    assert specs["k"][1] is None
+    assert specs["k"][2] in ("data", ("data",))
+
+
+def test_missing_mesh_axis_dropped():
+    """Rules referencing 'pod' resolve cleanly on a pod-less mesh."""
+    mesh = jax.sharding.AbstractMesh((2,), ("data",))
+    s = S.spec_for(mesh, (8, 16), ("batch", None))
+    assert s == P(("data",), None) or s == P("data", None)

@@ -1,0 +1,96 @@
+"""Transform-layer unit + property tests (DCT, FWHT, permutations)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.fft import dct as scipy_dct, idct as scipy_idct
+
+from repro.core import transforms as T
+
+
+@pytest.mark.parametrize("n", [2, 4, 7, 16, 31, 64, 128, 256, 1000])
+def test_dct_matches_scipy(n):
+    x = np.random.RandomState(n).randn(3, n).astype(np.float32)
+    ref = scipy_dct(x, type=2, norm="ortho", axis=-1)
+    np.testing.assert_allclose(np.asarray(T.dct(jnp.asarray(x))), ref,
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(T.dct_via_matmul(jnp.asarray(x))),
+                               ref, atol=5e-5)
+
+
+@pytest.mark.parametrize("n", [4, 16, 31, 128, 513])
+def test_idct_matches_scipy(n):
+    x = np.random.RandomState(n).randn(2, n).astype(np.float32)
+    ref = scipy_idct(x, type=2, norm="ortho", axis=-1)
+    np.testing.assert_allclose(np.asarray(T.idct(jnp.asarray(x))), ref,
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_dct_matrix_orthogonal(n):
+    c = T._dct_matrix_np(n)  # float64 host-side matrix
+    np.testing.assert_allclose(c @ c.T, np.eye(n), atol=1e-10)
+    # and the device copy (fp32) is orthogonal to fp32 tolerance
+    c32 = np.asarray(T.dct_matrix(n))
+    np.testing.assert_allclose(c32 @ c32.T, np.eye(n), atol=1e-5)
+
+
+@given(st.integers(2, 256), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_dct_roundtrip_property(n, seed):
+    x = np.random.RandomState(seed).randn(2, n).astype(np.float32)
+    rec = np.asarray(T.idct(T.dct(jnp.asarray(x))))
+    np.testing.assert_allclose(rec, x, atol=1e-4)
+
+
+@given(st.integers(2, 128), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_dct_parseval_property(n, seed):
+    """Orthonormality <=> energy preservation."""
+    x = np.random.RandomState(seed).randn(n).astype(np.float32)
+    y = np.asarray(T.dct(jnp.asarray(x)))
+    assert np.abs((y ** 2).sum() - (x ** 2).sum()) < 1e-3 * max(1, (x**2).sum())
+
+
+@given(st.integers(2, 64), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_dct_linearity_property(n, seed):
+    r = np.random.RandomState(seed)
+    x, y = r.randn(n).astype(np.float32), r.randn(n).astype(np.float32)
+    a = np.float32(r.randn())
+    lhs = np.asarray(T.dct(jnp.asarray(a * x + y)))
+    rhs = a * np.asarray(T.dct(jnp.asarray(x))) + np.asarray(T.dct(jnp.asarray(y)))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 512])
+def test_fwht_orthonormal_involution(n):
+    x = np.random.RandomState(0).randn(2, n).astype(np.float32)
+    y = T.fwht(jnp.asarray(x))
+    rec = np.asarray(T.fwht(y))
+    np.testing.assert_allclose(rec, x, atol=1e-4)  # H/sqrt(n) is involutive
+    assert abs(float((jnp.asarray(y) ** 2).sum()) - float((x ** 2).sum())) < 1e-2
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        T.fwht(jnp.zeros((2, 12)))
+
+
+@given(st.integers(2, 300))
+@settings(max_examples=50, deadline=None)
+def test_riffle_is_permutation(n):
+    p = T.make_riffle(n)
+    assert sorted(p.tolist()) == list(range(n))
+    inv = T.invert_permutation(p)
+    np.testing.assert_array_equal(p[inv], np.arange(n))
+
+
+def test_dct_gradients_flow():
+    def f(x):
+        return jnp.sum(T.dct(x) ** 2)
+    g = jax.grad(f)(jnp.ones((4, 16)))
+    # orthonormal transform: grad of sum of squares is 2x
+    np.testing.assert_allclose(np.asarray(g), 2 * np.ones((4, 16)), atol=1e-4)
