@@ -38,7 +38,10 @@ Method = Literal["auto", "fft", "matmul", "pallas"]
 # N at or below which the explicit-matrix (MXU) path is preferred on TPU.
 # Above it the FFT path wins on FLOPs; the Pallas kernel handles the fused
 # matmul path explicitly.  On CPU (tests) "auto" resolves to fft for large N.
-_MATMUL_MAX_N = 4096
+# Shared with kernels/ops.py (the backward pass picks its transform by the
+# same crossover) — keep the single definition here.
+MATMUL_MAX_N = 4096
+_MATMUL_MAX_N = MATMUL_MAX_N  # back-compat alias
 
 
 # ---------------------------------------------------------------------------
@@ -48,7 +51,7 @@ _MATMUL_MAX_N = 4096
 def _resolve_method(n: int, method: Method) -> str:
     if method != "auto":
         return method
-    return "matmul" if n <= _MATMUL_MAX_N else "fft"
+    return "matmul" if n <= MATMUL_MAX_N else "fft"
 
 
 def acdc(

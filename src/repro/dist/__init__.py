@@ -1,0 +1,19 @@
+"""Distributed execution subsystem.
+
+Four modules wire the model zoo, optimizers, data pipeline and checkpoint
+manager into a runnable sharded system (the launch/ scripts are thin CLIs
+over these):
+
+* :mod:`repro.dist.steps`       — train/serve step builders + state trees.
+* :mod:`repro.dist.sharding`    — logical-axis rules -> PartitionSpecs for
+                                  params, optimizer state, batches, caches.
+* :mod:`repro.dist.elastic`     — mesh-shrink policy, straggler monitor,
+                                  SIGTERM drain heartbeat.
+* :mod:`repro.dist.compression` — int8 blockwise gradient quantization with
+                                  error feedback and a compressed psum.
+
+Everything here runs identically on the CPU container (1-device mesh) and a
+pod — only the mesh shape changes.
+"""
+
+from repro.dist import compression, elastic, sharding, steps  # noqa: F401

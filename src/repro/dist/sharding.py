@@ -1,0 +1,184 @@
+"""Logical-axis sharding rules for the model zoo.
+
+One small engine resolves every placement decision in the system:
+
+    spec_for(mesh, shape, logical) -> PartitionSpec
+
+``logical`` names the TRAILING dims of ``shape`` (leading extra dims — the
+stacked-layer axis under ``lax.scan`` — are never sharded: every device
+runs every layer).  Each logical axis maps to an ordered tuple of mesh axes
+(``RULES``); resolution applies three safeguards, in order:
+
+* **presence** — rule axes missing from the mesh are dropped (the same
+  rules serve the pod-less 2-axis host mesh and the 3-axis multi-pod mesh);
+* **uniqueness** — a mesh axis is claimed at most once per array, first
+  claim (leftmost logical dim) wins: expert weights claim "model" before
+  the ffn dim can, and a sequence dim only takes "data" when the batch dim
+  could not (batch=1 long-context decode);
+* **divisibility** — the dim must divide evenly over the claimed axes,
+  otherwise the dim falls back to replicated.
+
+On top of the engine, :func:`param_specs` walks a model/optimizer state
+tree and assigns logical axes by parameter role (path pattern):
+embedding tables shard vocab over "model" and features over "data"
+(ZeRO-3 flavour); attention/MLP/SSM projections shard (in, out) over
+("data", "model") with output projections transposed; MoE expert stacks
+claim "model" for the expert axis (expert parallelism); SELL diagonals are
+O(N) — their last dim gets ZeRO-3 "data" sharding and everything else is
+replicated; norms/biases/conv taps are replicated.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis candidates
+RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": ("data",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "expert": ("model",),
+    "sell": ("data",),
+}
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def spec_for(mesh, shape: Sequence[int],
+             logical: Sequence[Optional[str]]) -> P:
+    """Resolve a PartitionSpec for ``shape`` under ``mesh``.
+
+    ``logical`` covers the trailing ``len(logical)`` dims; leading dims are
+    unsharded (stacked-layer convention).
+    """
+    sizes = _axis_sizes(mesh)
+    lead = len(shape) - len(logical)
+    if lead < 0:
+        raise ValueError(f"logical {logical} longer than shape {shape}")
+    assignment: list = [None] * len(shape)
+    claimed: set = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            continue
+        cand = tuple(a for a in RULES.get(name, ())
+                     if a in sizes and a not in claimed)
+        if not cand:
+            continue
+        total = math.prod(sizes[a] for a in cand)
+        if total <= 0 or shape[lead + i] % total != 0:
+            continue  # divisibility fallback: replicate this dim
+        assignment[lead + i] = cand[0] if len(cand) == 1 else cand
+        claimed.update(cand)
+    return P(*assignment)
+
+
+# ---------------------------------------------------------------------------
+# Role resolution: param-tree path -> logical axes.
+# ---------------------------------------------------------------------------
+
+# projections whose weight is (in, out) with OUT being the model dim
+_IN_PROJ = {"wq", "wk", "wv", "wg", "wu", "in_proj", "router"}
+# projections whose weight is (in, out) with IN being the model dim
+_OUT_PROJ = {"wo", "wd", "out_proj"}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        key = getattr(p, "key", getattr(p, "idx", getattr(p, "name", None)))
+        parts.append(str(key))
+    return "/".join(parts)
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Trailing logical axes for one parameter leaf (by role pattern).
+
+    Works on raw param trees and on optimizer-state trees (the "opt/m/..."
+    prefix leaves the role suffix intact, so moments inherit their
+    parameter's placement).
+    """
+    segs = path.split("/")
+    name = segs[-1]
+    parent = segs[-2] if len(segs) > 1 else ""
+    if name == "table" and parent == "embed":
+        return ("vocab", "embed")
+    if "sell" in segs:
+        # O(N) structured params: ZeRO-3 shard the feature dim over "data",
+        # replicate the stacked (L, K) leading dims.
+        return ("sell",) if ndim >= 1 else ()
+    if ndim < 2:
+        return ()  # scalars, norms, biases, conv taps: replicated
+    if name in ("w", "u", "v") or parent in _IN_PROJ | _OUT_PROJ:
+        expert = ("expert",) if "experts" in segs else ()
+        if parent in _OUT_PROJ:
+            trail = ("heads", "embed") if parent == "wo" else ("ffn", "embed")
+        elif parent in ("wq", "wk", "wv"):
+            trail = ("embed", "heads")
+        else:
+            trail = ("embed", "ffn")
+        return expert + trail
+    return ()
+
+
+def param_specs(tree, mesh):
+    """Same-structure tree of PartitionSpecs for a param/state tree.
+
+    Accepts concrete arrays or ShapeDtypeStructs (``jax.eval_shape`` output).
+    """
+    def one(path, leaf):
+        shape = leaf.shape
+        return spec_for(mesh, shape, logical_axes_for(_path_str(path),
+                                                      len(shape)))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_shardings(tree, mesh):
+    """NamedShardings for a param/state tree (jit in/out_shardings)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Batch and cache placement.
+# ---------------------------------------------------------------------------
+
+def data_specs(mesh, batch):
+    """Batch leaves shard dim 0 over ("pod", "data"); the rest is local."""
+    def one(leaf):
+        nd = len(leaf.shape)
+        return spec_for(mesh, leaf.shape, ("batch",) + (None,) * (nd - 1))
+    return jax.tree.map(one, batch)
+
+
+_KV_NAMES = {"k", "v", "xk", "xv", "attn_k", "attn_v"}
+
+
+def cache_specs(cache, mesh):
+    """Decode-cache placement: batch over "data", heads over "model".
+
+    KV caches are (L, B, S, H, Dh); when the batch dim cannot shard
+    (batch=1 long-context) the sequence dim takes the data shards instead
+    — that falls out of the first-claim-wins engine, no special case.
+    SSM states are (L, B, H, P, N) and conv windows (L, B, W-1, C).
+    """
+    def one(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = len(leaf.shape)
+        if name in _KV_NAMES and nd == 5:
+            logical = (None, "batch", "seq", "heads", None)
+        elif name == "ssm" and nd == 5:
+            logical = (None, "batch", "heads", None, None)
+        else:
+            logical = (None, "batch") + (None,) * max(nd - 2, 0)
+            logical = logical[:nd]
+        return spec_for(mesh, leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,132 @@
+"""Train/serve step builders and state trees for the launch stack.
+
+The functions here are pure closures over (model, cfg, opt) so the
+launchers can wrap them in ``jax.jit`` with explicit in/out shardings
+(see :mod:`repro.dist.sharding`) and the dry-run can ``.lower()`` them
+against ShapeDtypeStructs without allocating anything.
+
+State layout (a plain dict pytree, checkpoint- and eval_shape-friendly)::
+
+    {"params": <model params>, "opt": <optimizer state>, "step": int32[]}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import global_norm, tree_add
+
+
+# ---------------------------------------------------------------------------
+# State trees.
+# ---------------------------------------------------------------------------
+
+def init_state(model, cfg, opt, rng: jax.Array) -> dict:
+    """Concrete train state: params + optimizer moments + step counter."""
+    params = model.init(rng, cfg)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(model, cfg, opt) -> dict:
+    """ShapeDtypeStruct mirror of :func:`init_state` (no allocation)."""
+    return jax.eval_shape(functools.partial(init_state, model, cfg, opt),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Training.
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
+    """Build ``step(state, batch) -> (new_state, metrics)``.
+
+    ``accum_steps > 1`` splits the global batch into equal microbatches and
+    accumulates loss/grads with a ``lax.scan`` (live memory is one
+    microbatch's activations; the compiled program is O(1) in the number of
+    microbatches).  With equal token counts per microbatch the mean loss
+    and mean grads match the full-batch computation exactly, which
+    tests/test_train_integration.py pins down.
+    """
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, cfg)
+
+    def grads_of(params, batch):
+        if accum_steps <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            if b % accum_steps:
+                raise ValueError(
+                    f"global batch {b} not divisible by accum {accum_steps}")
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), grad_acc, g)
+            return (loss_acc + l, grad_acc), None
+
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / accum_steps
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        updates, new_opt = opt.update(grads, state["opt"], state["params"],
+                                      state["step"])
+        new_params = tree_add(state["params"], updates)
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": global_norm(grads),
+            "update_norm": global_norm(updates),
+        }
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving (single-token decode against the model-zoo caches).
+# ---------------------------------------------------------------------------
+
+def make_serve_step(model, cfg, sample: str = "greedy",
+                    temperature: float = 1.0) -> Callable:
+    """Build ``step(params, cache, tokens, position, rng) -> (next, cache)``.
+
+    One decode step against the family-specific cache (KV for attention
+    archs, recurrent SSM/conv state for mamba-style archs, both for the
+    hybrid) followed by sampling: ``greedy`` argmax or ``temp``
+    temperature-scaled categorical draw from ``rng``.
+    """
+    if sample not in ("greedy", "temp"):
+        raise ValueError(f"unknown sampler {sample!r}")
+
+    def step(params, cache, tokens, position, rng):
+        logits, new_cache = model.decode_step(params, cache, tokens,
+                                              position, cfg)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(
+                rng, logits.astype(jnp.float32) / max(temperature, 1e-6),
+                axis=-1)
+        return nxt.astype(jnp.int32), new_cache
+
+    return step

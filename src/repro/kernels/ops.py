@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import transforms
+from repro.core.acdc import MATMUL_MAX_N
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import scaled_matmul as smm_mod
 
@@ -57,14 +58,30 @@ def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def acdc_fused(x, a, d, bias):
-    """Fused ACDC: ``y = ((x*a) C * d + bias) C^T`` along the last axis.
-
-    ``bias`` may be None (resolved before the custom_vjp boundary by
-    :func:`acdc_fused_op`).
-    """
+    """Fused ACDC: ``y = ((x*a) C * d + bias) C^T`` along the last axis."""
     x2, shape = _flatten(x)
     y = _acdc_fwd_impl(x2, a, d, bias, interpret=_INTERPRET)
     return y.reshape(shape)
+
+
+def _acdc_bwd_core(x, a, d, g):
+    """Shared backward math (paper eqs. 10-14); returns (dx, da, dd, gc).
+
+    ``gc = g C`` is reused for the bias gradient when a bias exists.
+    """
+    n = x.shape[-1]
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    dct = transforms.dct_via_matmul if n <= MATMUL_MAX_N else transforms.dct
+    idct = (transforms.idct_via_matmul if n <= MATMUL_MAX_N
+            else transforms.idct)
+    gc = dct(g2.astype(jnp.float32))
+    h2 = dct(x2.astype(jnp.float32) * a.astype(jnp.float32))  # recompute (paper 5.3)
+    dd = jnp.sum(h2 * gc, axis=0).astype(d.dtype)
+    dh1 = idct(gc * d.astype(jnp.float32))
+    da = jnp.sum(x2.astype(jnp.float32) * dh1, axis=0).astype(a.dtype)
+    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype).reshape(shape)
+    return dx, da, dd, gc
 
 
 def _acdc_vjp_fwd(x, a, d, bias):
@@ -74,22 +91,39 @@ def _acdc_vjp_fwd(x, a, d, bias):
 
 def _acdc_vjp_bwd(res, g):
     x, a, d = res
-    n = x.shape[-1]
-    x2, shape = _flatten(x)
-    g2, _ = _flatten(g)
-    dct = transforms.dct_via_matmul if n <= 4096 else transforms.dct
-    idct = transforms.idct_via_matmul if n <= 4096 else transforms.idct
-    gc = dct(g2.astype(jnp.float32))
+    dx, da, dd, gc = _acdc_bwd_core(x, a, d, g)
     dbias = jnp.sum(gc, axis=0).astype(d.dtype)
-    h2 = dct(x2.astype(jnp.float32) * a.astype(jnp.float32))  # recompute (paper 5.3)
-    dd = jnp.sum(h2 * gc, axis=0).astype(d.dtype)
-    dh1 = idct(gc * d.astype(jnp.float32))
-    da = jnp.sum(x2.astype(jnp.float32) * dh1, axis=0).astype(a.dtype)
-    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype).reshape(shape)
     return dx, da, dd, dbias
 
 
 acdc_fused.defvjp(_acdc_vjp_fwd, _acdc_vjp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def acdc_fused_nobias(x, a, d):
+    """Bias-free fused ACDC: ``y = ((x*a) C * d) C^T``.
+
+    A separate primitive (not ``acdc_fused`` with zeros): the LM path sets
+    ``bias=False`` on every projection, and a dummy zero bias would pay the
+    broadcast add in the forward AND a full (M, N) reduction for its VJP on
+    every call.
+    """
+    x2, shape = _flatten(x)
+    y = _acdc_fwd_impl(x2, a, d, None, interpret=_INTERPRET)
+    return y.reshape(shape)
+
+
+def _acdc_nobias_vjp_fwd(x, a, d):
+    return acdc_fused_nobias(x, a, d), (x, a, d)
+
+
+def _acdc_nobias_vjp_bwd(res, g):
+    x, a, d = res
+    dx, da, dd, _ = _acdc_bwd_core(x, a, d, g)
+    return dx, da, dd
+
+
+acdc_fused_nobias.defvjp(_acdc_nobias_vjp_fwd, _acdc_nobias_vjp_bwd)
 
 
 def acdc_fused_op(
@@ -98,9 +132,9 @@ def acdc_fused_op(
     d: jax.Array,
     bias: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """User-facing fused ACDC; handles the optional bias."""
+    """User-facing fused ACDC; dispatches on the optional bias."""
     if bias is None:
-        bias = jnp.zeros_like(d)
+        return acdc_fused_nobias(x, a, d)
     return acdc_fused(x, a, d, bias)
 
 

@@ -121,23 +121,35 @@ def main(argv=None):
             t0 = time.time()
             batch = pipeline.batch_at(step)
             state, metrics = jitted(state, batch)
+            # sync before timing: dispatch is async, so the unblocked wall
+            # time is just the enqueue cost (~ms) — the straggler monitor
+            # would seed its EWMA from that and flag every real measurement
+            jax.block_until_ready(metrics)
+            dt = time.time() - t0
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])
                 gn = float(metrics["grad_norm"])
-                dt = time.time() - t0
                 print(f"step {step:5d} loss {loss:.4f} |g| {gn:.3f} "
                       f"{dt*1e3:.0f}ms", flush=True)
-            if monitor.observe(step, time.time() - t0):
+            # the first step's wall time is dominated by jit compilation —
+            # seeding the EWMA with it would mask real stragglers for the
+            # first dozens of steps (also after every resume/recompile)
+            if step > start_step and monitor.observe(step, dt):
                 print(f"[straggler] step {step} exceeded "
                       f"{monitor.factor}x EWMA", flush=True)
             if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
                 ckpt.save_async(step + 1, state, extra={"arch": args.arch})
             if hb.should_stop:
                 print("[preempt] SIGTERM received: draining + checkpointing")
+                ckpt.wait()
                 ckpt.save(step + 1, state, extra={"arch": args.arch})
                 break
-        ckpt.wait()
-        ckpt.save(args.steps, state, extra={"arch": args.arch})
+        else:
+            # completed (no preempt break): the final save must not run on
+            # the drain path — it would mislabel a mid-run state as
+            # ``args.steps`` and a resumed job would think training is done.
+            ckpt.wait()
+            ckpt.save(args.steps, state, extra={"arch": args.arch})
     print("done.")
 
 

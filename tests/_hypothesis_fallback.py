@@ -1,0 +1,92 @@
+"""Deterministic stand-in for ``hypothesis`` on minimal installs.
+
+The property tests in this suite only use ``@given`` with ``st.integers``
+and ``st.sampled_from`` plus ``@settings(max_examples=..., deadline=None)``.
+When hypothesis is unavailable (the offline container has no wheel), this
+shim replays each property over a fixed, seeded sample of the strategy
+space — strictly weaker than real shrinking/search, but the properties
+still execute and the suite collects.  Test modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # minimal install
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng: random.Random) -> int:
+        # bias toward the boundaries, where the bugs live
+        r = rng.random()
+        if r < 0.15:
+            return self.lo
+        if r < 0.3:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng: random.Random):
+        return rng.choice(self.options)
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        return _SampledFrom(options)
+
+
+strategies = _StrategiesModule()
+
+
+def settings(max_examples: int = 10, deadline=None, **_kwargs):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOT functools.wraps: pytest would follow __wrapped__ to the
+        # original signature and look for fixtures named after the drawn
+        # parameters.  The wrapper must present a zero-arg signature.
+        def wrapper():
+            # read at call time: @settings may sit above @given (attribute
+            # lands on this wrapper) or below it (lands on fn)
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 10))
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                drawn = tuple(s.sample(rng) for s in strats)
+                try:
+                    fn(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"args={drawn!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -6,7 +6,10 @@ quantize/EF are the meat)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install: deterministic replay shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.dist import compression as C
 
