@@ -1,0 +1,219 @@
+"""Serving-path benchmark: sequential-decode prefill vs batched prefill vs
+continuous batching.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--arch qwen3_1_7b]
+        [--slots 4] [--prompt-len 32] [--gen 32] [--requests 12]
+
+Three modes over the same smoke-scale model and workload:
+
+* ``sequential``  — the pre-engine serving path: the prompt is fed one
+  token at a time through the fused decode step (``prompt_len`` dispatches
+  per request), then greedy decode;
+* ``batched_prefill`` — ONE lowered prefill program per batch ingests all
+  prompts, then lockstep greedy decode (static batching);
+* ``continuous``  — the slot engine: per-admission prefill (one dispatch
+  per request), one fused decode tick for all active slots, eviction +
+  refill under a Poisson-ish ragged arrival stream.
+
+Emits ``results/BENCH_serve.json`` with tokens/sec, time-to-first-token and
+— the acceptance check — the number of prefill dispatches per mode:
+``batched_prefill`` and ``continuous`` must issue one lowered prefill
+program per batch/admission, never ``prompt_len`` decode dispatches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.dist import steps as steps_mod
+from repro.models import get_model
+from repro.serving import Engine, Request
+from repro.serving.request import make_ragged_requests
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def bench_sequential(model, cfg, params, prompts, gen: int):
+    """Old serving path: prompt tokens through the decode step one by one."""
+    b, p = prompts.shape
+    serve = jax.jit(steps_mod.make_serve_step(model, cfg))
+    cache = model.init_cache(cfg, b, p + gen + 1)
+    rng = jax.random.PRNGKey(0)
+    # warmup compile outside the timed region
+    serve(params, model.init_cache(cfg, b, p + gen + 1), prompts[:, 0],
+          jnp.zeros((b,), jnp.int32), rng)[0].block_until_ready()
+
+    t0 = time.perf_counter()
+    tok = prompts[:, 0]
+    dispatches = 0
+    for i in range(p - 1):
+        _, cache = serve(params, cache, tok, jnp.full((b,), i, jnp.int32),
+                         rng)
+        tok = prompts[:, i + 1]
+        dispatches += 1
+    nxt, cache = serve(params, cache, tok, jnp.full((b,), p - 1, jnp.int32),
+                       rng)
+    dispatches += 1
+    jax.block_until_ready(nxt)
+    t_first = time.perf_counter() - t0          # ttft: whole prompt + 1 tok
+
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        nxt, cache = serve(params, cache, nxt,
+                           jnp.full((b,), p + i, jnp.int32), rng)
+    jax.block_until_ready(nxt)
+    t_dec = time.perf_counter() - t0
+    return {
+        "mode": "sequential",
+        "prefill_dispatches_per_request": dispatches,
+        "ttft_s": t_first,
+        "decode_tok_per_s": b * (gen - 1) / max(t_dec, 1e-9),
+        "total_s": t_first + t_dec,
+        "tokens_out": b * gen,
+    }
+
+
+def bench_batched_prefill(model, cfg, params, prompts, gen: int):
+    b, p = prompts.shape
+    prefill = jax.jit(steps_mod.make_prefill_step(model, cfg))
+    serve = jax.jit(steps_mod.make_serve_step(model, cfg))
+    lengths = jnp.full((b,), p, jnp.int32)
+    rng = jax.random.PRNGKey(0)
+    # warmup compiles
+    cache = model.init_cache(cfg, b, p + gen + 1)
+    warm, wcache = prefill(params, cache, prompts, lengths)
+    serve(params, wcache, jnp.argmax(warm, -1).astype(jnp.int32),
+          lengths, rng)[0].block_until_ready()
+
+    cache = model.init_cache(cfg, b, p + gen + 1)
+    t0 = time.perf_counter()
+    last, cache = prefill(params, cache, prompts, lengths)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_first = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        tok, cache = serve(params, cache, tok,
+                           jnp.full((b,), p + i, jnp.int32), rng)
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t0
+    return {
+        "mode": "batched_prefill",
+        "prefill_dispatches_per_request": 1,
+        "ttft_s": t_first,
+        "decode_tok_per_s": b * (gen - 1) / max(t_dec, 1e-9),
+        "total_s": t_first + t_dec,
+        "tokens_out": b * gen,
+    }
+
+
+def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
+                     gen: int, n_requests: int):
+    """Ragged Poisson-ish stream: arrivals are interleaved with ticks."""
+    reqs = make_ragged_requests(cfg.vocab_size, n_requests, prompt_len, gen,
+                                vary_budget=True)
+    # exponential inter-arrival gaps measured in ticks
+    rs = np.random.RandomState(1)
+    gaps = rs.exponential(scale=max(gen / (2 * n_slots), 0.5),
+                          size=n_requests)
+    arrive_at = np.floor(np.cumsum(gaps)).astype(int)
+
+    eng = Engine(model, cfg, params, n_slots=n_slots,
+                 max_len=prompt_len + gen + 1, max_prompt_len=prompt_len)
+    # warmup both compiled programs on a throwaway request, then snapshot
+    # the stats so the report covers only the timed workload
+    warm = Request(rid=10**6, prompt=[1, 2, 3], max_new_tokens=2)
+    eng.run([warm], max_ticks=50)
+    warm_stats = dict(eng.stats)
+
+    t0 = time.perf_counter()
+    nxt = 0
+    tick = 0
+    limit = n_requests * (prompt_len + gen) + 64
+    while nxt < n_requests or eng.scheduler.has_work:
+        while nxt < n_requests and arrive_at[nxt] <= tick:
+            eng.submit(reqs[nxt])
+            nxt += 1
+        eng.tick()
+        tick += 1
+        if tick > limit:
+            raise RuntimeError("engine not drained")
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    ttft = [r.t_first_token - r.t_submit for r in reqs]
+    return {
+        "mode": "continuous",
+        "prefill_dispatches_per_request": 1,
+        "prefill_dispatches_total": eng.stats["prefill_dispatches"]
+        - warm_stats["prefill_dispatches"],
+        "decode_ticks": eng.stats["decode_ticks"]
+        - warm_stats["decode_ticks"],
+        "ttft_s": float(np.median(ttft)),
+        "ttft_max_s": float(np.max(ttft)),
+        "decode_tok_per_s": toks / max(dt, 1e-9),
+        "total_s": dt,
+        "tokens_out": toks,
+        "n_requests": n_requests,
+    }
+
+
+def main(csv: bool = True, argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_1_7b", choices=registry.ARCHS)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_smoke_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.slots, args.prompt_len), 0,
+        cfg.vocab_size, jnp.int32)
+
+    rows = [
+        bench_sequential(model, cfg, params, prompts, args.gen),
+        bench_batched_prefill(model, cfg, params, prompts, args.gen),
+        bench_continuous(model, cfg, params, args.slots, args.prompt_len,
+                         args.gen, args.requests),
+    ]
+    seq, bat = rows[0], rows[1]
+    assert bat["prefill_dispatches_per_request"] == 1
+    assert seq["prefill_dispatches_per_request"] == args.prompt_len
+
+    out = {
+        "arch": cfg.name,
+        "slots": args.slots,
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "modes": rows,
+        "ttft_speedup_batched_vs_sequential":
+            seq["ttft_s"] / max(bat["ttft_s"], 1e-9),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    if csv:
+        for r in rows:
+            print(f"serve_{r['mode']},{r['total_s'] * 1e6:.0f},"
+                  f"tok_per_s={r['decode_tok_per_s']:.1f};"
+                  f"ttft_s={r['ttft_s']:.3f};"
+                  f"prefill_dispatches={r['prefill_dispatches_per_request']}")
+        print(f"wrote {os.path.relpath(path)}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,table1,fig3")
+                    help="comma list: fig2,table1,fig3,serve")
     args = ap.parse_args()
     which = set((args.only or "fig2,table1,fig3").split(","))
 
@@ -32,6 +32,10 @@ def main() -> None:
     if "fig3" in which:
         from benchmarks import bench_fig3_recovery
         bench_fig3_recovery.main(csv=True, steps=300 if args.quick else 3000)
+        sys.stdout.flush()
+    if "serve" in which:
+        from benchmarks import bench_serve
+        bench_serve.main(csv=True, argv=[])
         sys.stdout.flush()
 
 

@@ -17,7 +17,10 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.dist import compression
 from repro.optim.optimizers import global_norm, tree_add
 
 
@@ -25,27 +28,40 @@ from repro.optim.optimizers import global_norm, tree_add
 # State trees.
 # ---------------------------------------------------------------------------
 
-def init_state(model, cfg, opt, rng: jax.Array) -> dict:
-    """Concrete train state: params + optimizer moments + step counter."""
+def init_state(model, cfg, opt, rng: jax.Array, compress_dp: int = 0) -> dict:
+    """Concrete train state: params + optimizer moments + step counter.
+
+    ``compress_dp > 0`` adds a ``grad_error`` tree — the per-data-rank int8
+    quantization residuals (leading axis = data-parallel size) carried by
+    the compressed gradient sync (:mod:`repro.dist.compression`).
+    """
     params = model.init(rng, cfg)
-    return {
+    state = {
         "params": params,
         "opt": opt.init(params),
         "step": jnp.zeros((), jnp.int32),
     }
+    if compress_dp > 0:
+        state["grad_error"] = jax.tree.map(
+            lambda p: jnp.zeros((compress_dp,) + p.shape, jnp.float32),
+            params)
+    return state
 
 
-def abstract_state(model, cfg, opt) -> dict:
+def abstract_state(model, cfg, opt, compress_dp: int = 0) -> dict:
     """ShapeDtypeStruct mirror of :func:`init_state` (no allocation)."""
-    return jax.eval_shape(functools.partial(init_state, model, cfg, opt),
-                          jax.random.PRNGKey(0))
+    return jax.eval_shape(
+        functools.partial(init_state, model, cfg, opt,
+                          compress_dp=compress_dp),
+        jax.random.PRNGKey(0))
 
 
 # ---------------------------------------------------------------------------
 # Training.
 # ---------------------------------------------------------------------------
 
-def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
+def make_train_step(model, cfg, opt, accum_steps: int = 1,
+                    compress_mesh=None, data_axis: str = "data") -> Callable:
     """Build ``step(state, batch) -> (new_state, metrics)``.
 
     ``accum_steps > 1`` splits the global batch into equal microbatches and
@@ -54,6 +70,15 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
     microbatches).  With equal token counts per microbatch the mean loss
     and mean grads match the full-batch computation exactly, which
     tests/test_train_integration.py pins down.
+
+    ``compress_mesh`` (a Mesh) routes the data-parallel gradient all-reduce
+    through :func:`repro.dist.compression.compressed_psum_tree` under
+    ``shard_map`` over ``data_axis``: int8 on the wire with error feedback.
+    The state must then carry a ``grad_error`` tree (``init_state`` with
+    ``compress_dp = mesh.shape[data_axis]``).  This path treats params as
+    replicated across ``data_axis`` inside the shard_map body (pure data
+    parallelism — the inter-pod DP sync is the traffic worth compressing);
+    model-parallel placement still applies outside via jit shardings.
     """
     def loss_fn(params, batch):
         return model.loss_fn(params, batch, cfg)
@@ -85,8 +110,36 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
         inv = 1.0 / accum_steps
         return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
+    def compressed_grads_of(params, batch, error):
+        """Per-rank grads + error-feedback int8 psum under shard_map."""
+        dsize = compress_mesh.shape[data_axis]
+
+        def local_fn(params, batch, error):
+            loss, grads = grads_of(params, batch)
+            err = jax.tree.map(lambda e: e[0], error)       # drop rank axis
+            grads, new_err = compression.compressed_psum_tree(
+                grads, err, data_axis)
+            grads = jax.tree.map(lambda g: g / dsize, grads)  # psum -> mean
+            loss = jax.lax.pmean(loss, data_axis)
+            return loss, grads, jax.tree.map(lambda e: e[None], new_err)
+
+        rep = jax.tree.map(lambda _: P(), params)
+        sharded = jax.tree.map(lambda _: P(data_axis), batch)
+        err_spec = jax.tree.map(lambda _: P(data_axis), error)
+        return shard_map(
+            local_fn, mesh=compress_mesh,
+            in_specs=(rep, sharded, err_spec),
+            out_specs=(P(), rep, err_spec),
+            check_rep=False,
+        )(params, batch, error)
+
     def step(state, batch):
-        loss, grads = grads_of(state["params"], batch)
+        if compress_mesh is not None:
+            loss, grads, new_error = compressed_grads_of(
+                state["params"], batch, state["grad_error"])
+        else:
+            loss, grads = grads_of(state["params"], batch)
+            new_error = None
         updates, new_opt = opt.update(grads, state["opt"], state["params"],
                                       state["step"])
         new_params = tree_add(state["params"], updates)
@@ -97,6 +150,8 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
         }
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
+        if new_error is not None:
+            new_state["grad_error"] = new_error
         return new_state, metrics
 
     return step
@@ -107,26 +162,57 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1) -> Callable:
 # ---------------------------------------------------------------------------
 
 def make_serve_step(model, cfg, sample: str = "greedy",
-                    temperature: float = 1.0) -> Callable:
+                    temperature: float = 1.0, top_k: int = 0,
+                    top_p: float = 0.0) -> Callable:
     """Build ``step(params, cache, tokens, position, rng) -> (next, cache)``.
 
     One decode step against the family-specific cache (KV for attention
     archs, recurrent SSM/conv state for mamba-style archs, both for the
-    hybrid) followed by sampling: ``greedy`` argmax or ``temp``
-    temperature-scaled categorical draw from ``rng``.
+    hybrid) followed by on-device sampling: ``greedy`` argmax or ``temp``
+    temperature-scaled categorical with optional top-k / top-p filtering
+    (:mod:`repro.serving.sampler`).
     """
+    from repro.serving import sampler as sampler_mod  # avoid import cycle
+
     if sample not in ("greedy", "temp"):
         raise ValueError(f"unknown sampler {sample!r}")
 
     def step(params, cache, tokens, position, rng):
         logits, new_cache = model.decode_step(params, cache, tokens,
                                               position, cfg)
-        if sample == "greedy":
-            nxt = jnp.argmax(logits, axis=-1)
-        else:
-            nxt = jax.random.categorical(
-                rng, logits.astype(jnp.float32) / max(temperature, 1e-6),
-                axis=-1)
-        return nxt.astype(jnp.int32), new_cache
+        nxt = sampler_mod.sample(rng, logits, method=sample,
+                                 temperature=temperature, top_k=top_k,
+                                 top_p=top_p)
+        return nxt, new_cache
+
+    return step
+
+
+def make_prefill_step(model, cfg, full_logits: bool = False) -> Callable:
+    """Build ``step(params, cache, tokens, lengths[, fe]) -> (logits, cache)``.
+
+    One lowered program runs the model over the whole (right-padded) prompt
+    batch and scatters the resulting KV / SSM state into the decode cache —
+    replacing ``prompt_len`` sequential decode dispatches with a single
+    compiled prefill (the ROADMAP batched-prefill item).  ``lengths`` (B,)
+    gives each row's real prompt length; cache slots at or beyond it are
+    zeroed so the additive decode scatter stays sound when continuous
+    batching reuses slots.
+
+    Returns the logits at each row's last real token (B, V) by default, or
+    the full (B, S, V) grid with ``full_logits=True`` (equivalence tests,
+    dry-run lowering).
+    """
+    if model.prefill is None:
+        raise ValueError(f"family {cfg.family!r} has no prefill path")
+
+    def step(params, cache, tokens, lengths, frontend_embeds=None):
+        logits, new_cache = model.prefill(params, cache, tokens, cfg,
+                                          lengths, frontend_embeds)
+        if full_logits:
+            return logits, new_cache
+        idx = jnp.maximum(lengths - 1, 0)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        return last, new_cache
 
     return step

@@ -256,15 +256,20 @@ def build_cell(arch: str, shape_name: str, mesh, sell: str = "dense",
         params_abs = jax.eval_shape(
             functools.partial(model.init, cfg=cfg), jax.random.PRNGKey(0))
         params_sh = shard_mod.param_shardings(params_abs, mesh)
+        # the REAL serving prefill: full-prompt forward + decode-cache
+        # scatter in one lowered program (repro.dist.steps.make_prefill_step)
+        cache_abs = jax.eval_shape(
+            functools.partial(model.init_cache, cfg, shape.global_batch,
+                              shape.seq_len))
+        cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                shard_mod.cache_specs(cache_abs, mesh))
         tok = specs["tokens"]
         tok_sh = NamedSharding(mesh, shard_mod.data_specs(mesh, tok))
-        args = [params_abs, tok]
-        in_sh = [params_sh, tok_sh]
+        lengths = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        step_fn = steps_mod.make_prefill_step(model, cfg, full_logits=True)
+        args = [params_abs, cache_abs, tok, lengths]
+        in_sh = [params_sh, cache_sh, tok_sh, rep]
         fe = specs.get("frontend_embeds")
-
-        def prefill(params, tokens, frontend_embeds=None):
-            return model.apply(params, tokens, cfg, frontend_embeds)
-
         if fe is not None:
             args.append(fe)
             in_sh.append(NamedSharding(mesh, shard_mod.data_specs(mesh, fe)))
@@ -272,8 +277,8 @@ def build_cell(arch: str, shape_name: str, mesh, sell: str = "dense",
         vspec = shard_mod.spec_for(mesh, (shape.global_batch, shape.seq_len,
                                           cfg.vocab_size),
                                    ("batch", None, "vocab"))
-        out_sh = NamedSharding(mesh, vspec)
-        return prefill, tuple(args), tuple(in_sh), out_sh
+        out_sh = (NamedSharding(mesh, vspec), cache_sh)
+        return step_fn, tuple(args), tuple(in_sh), out_sh
 
     if shape.kind == "decode":
         params_abs = jax.eval_shape(
@@ -323,6 +328,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):     # older jax: list of dicts
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         n_dev = mesh.devices.size

@@ -1,7 +1,13 @@
-"""Batched serving launcher: prefill + decode loop with a KV/state cache.
+"""Serving launcher: continuous-batching engine over the model zoo.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1_7b --smoke \
-        --batch 4 --prompt-len 32 --gen 32
+        --slots 4 --prompt-len 32 --gen 32 --requests 12
+
+Each request gets a random ragged-length prompt; the engine admits them
+into batch slots (one lowered prefill program per admission), advances all
+active slots with one fused decode step per tick, and evicts finished
+requests so the batch stays full.  ``--static`` falls back to plain
+batched prefill + lockstep decode (no continuous batching) for A/B runs.
 """
 
 from __future__ import annotations
@@ -12,10 +18,88 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import registry
 from repro.dist import steps as steps_mod
 from repro.models import get_model
+from repro.serving import Engine
+from repro.serving.request import make_ragged_requests
+
+
+def _make_frontend(cfg, rng, batch: int):
+    if cfg.family == "encdec":
+        frames = cfg.n_frontend_tokens or 16
+        return jax.random.normal(rng, (batch, frames, cfg.d_model))
+    return None
+
+
+def run_static(model, cfg, params, args, prompts, rng):
+    """Batched prefill then lockstep greedy decode (no slot reuse)."""
+    b, p, g = args.slots, args.prompt_len, args.gen
+    max_len = p + g + 1
+    cache = model.init_cache(cfg, b, max_len)
+    fe = _make_frontend(cfg, rng, b)
+    prefill = jax.jit(steps_mod.make_prefill_step(model, cfg))
+    serve = jax.jit(steps_mod.make_serve_step(
+        model, cfg, sample=args.sample, temperature=args.temperature,
+        top_k=args.top_k, top_p=args.top_p))
+
+    from repro.serving import sampler as sampler_mod
+
+    t0 = time.time()
+    lengths = jnp.full((b,), p, jnp.int32)
+    last, cache = prefill(params, cache, prompts, lengths, fe)
+    tok = sampler_mod.sample(rng, last, method=args.sample,
+                             temperature=args.temperature,
+                             top_k=args.top_k, top_p=args.top_p)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(g - 1):
+        pos = jnp.full((b,), p + i, jnp.int32)
+        tok, cache = serve(params, cache, tok, pos,
+                           jax.random.fold_in(rng, i))
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"[static] prefill {p}x{b} toks in ONE dispatch: {t_prefill:.2f}s | "
+          f"decode {g - 1} steps: {dt:.2f}s ({b * (g - 1) / max(dt, 1e-9):.1f} tok/s)")
+    print("sample generations (token ids):")
+    for row in gen[: min(b, 2)]:
+        print("  ", row[:16].tolist())
+
+
+def run_engine(model, cfg, params, args, rng):
+    eng = Engine(model, cfg, params, n_slots=args.slots,
+                 max_len=args.prompt_len + args.gen + 1,
+                 max_prompt_len=args.prompt_len, sample=args.sample,
+                 temperature=args.temperature, top_k=args.top_k,
+                 top_p=args.top_p)
+    reqs = make_ragged_requests(cfg.vocab_size, args.requests,
+                                args.prompt_len, args.gen)
+    if cfg.family == "encdec":
+        for req in reqs:
+            req.frontend_embeds = _make_frontend(
+                cfg, jax.random.fold_in(jax.random.PRNGKey(7), req.rid), 1)
+
+    t0 = time.time()
+    eng.run(reqs, max_ticks=args.requests * (args.prompt_len + args.gen) + 64)
+    dt = time.time() - t0
+    toks = eng.stats["tokens_out"]
+    ttft = [r.t_first_token - r.t_submit for r in reqs]
+    print(f"[engine] {len(reqs)} ragged requests | "
+          f"{eng.stats['prefill_dispatches']} prefill dispatches | "
+          f"{eng.stats['decode_ticks']} decode ticks | "
+          f"{toks} tokens in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[engine] ttft p50 {np.median(ttft):.3f}s max {max(ttft):.3f}s")
+    print("sample generations (token ids):")
+    for r in reqs[:2]:
+        print(f"   rid={r.rid} len={r.prompt_len} "
+              f"finish={r.finish_reason}: {r.generated[:16]}")
 
 
 def main(argv=None):
@@ -23,10 +107,16 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3_1_7b", choices=registry.ARCHS)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sell", default="dense")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--sample", default="greedy", choices=["greedy", "temp"])
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0)
+    ap.add_argument("--static", action="store_true",
+                    help="batched prefill + lockstep decode, no slot reuse")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -36,47 +126,14 @@ def main(argv=None):
     model = get_model(cfg)
     rng = jax.random.PRNGKey(0)
     params = model.init(rng, cfg)
+    print(f"arch={cfg.name} sell={cfg.sell_kind} slots={args.slots}")
 
-    b, p, g = args.batch, args.prompt_len, args.gen
-    max_len = p + g + 1
-    prompts = jax.random.randint(rng, (b, p), 0, cfg.vocab_size, jnp.int32)
-
-    cache = model.init_cache(cfg, b, max_len)
-    serve_step = jax.jit(
-        steps_mod.make_serve_step(model, cfg, sample=args.sample),
-        static_argnums=())
-
-    # prefill: feed prompt tokens one step at a time through the decode path
-    # (smoke-scale; the production prefill lowers model.apply — see dryrun
-    # prefill cells).  For encdec archs the cross-KV prefill runs first.
-    if cfg.family == "encdec":
-        frames = jax.random.normal(
-            rng, (b, cfg.n_frontend_tokens or 16, cfg.d_model))
-        cache = model.module.prefill_cross(params, cache, frames, cfg)
-
-    t0 = time.time()
-    tok = prompts[:, 0]
-    for i in range(p - 1):
-        _, cache = serve_step(params, cache, tok,
-                              jnp.full((b,), i, jnp.int32), rng)
-        tok = prompts[:, i + 1]
-    t_prefill = time.time() - t0
-
-    out = []
-    t0 = time.time()
-    for i in range(g):
-        pos = jnp.full((b,), p - 1 + i, jnp.int32)
-        tok, cache = serve_step(params, cache, tok, pos,
-                                jax.random.fold_in(rng, i))
-        out.append(tok)
-    dt = time.time() - t0
-    gen = jnp.stack(out, axis=1)
-    print(f"arch={cfg.name} sell={cfg.sell_kind} batch={b}")
-    print(f"prefill {p} toks: {t_prefill:.2f}s | decode {g} steps: {dt:.2f}s "
-          f"({b * g / dt:.1f} tok/s)")
-    print("sample generations (token ids):")
-    for row in gen[: min(b, 2)]:
-        print("  ", row[:16].tolist())
+    if args.static:
+        prompts = jax.random.randint(
+            rng, (args.slots, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+        run_static(model, cfg, params, args, prompts, rng)
+    else:
+        run_engine(model, cfg, params, args, rng)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import registry
@@ -43,7 +44,7 @@ SELL_GROUPS = (
 
 def build(arch: str, smoke: bool, sell: str, seq_len: int,
           global_batch: int, lr: float, total_steps: int,
-          accum_steps: int = 1, mesh=None):
+          accum_steps: int = 1, mesh=None, compress_grads: bool = False):
     cfg = registry.get_smoke_config(arch) if smoke else registry.get_config(arch)
     if sell != "dense":
         cfg = dataclasses.replace(cfg, sell_kind=sell)
@@ -52,10 +53,25 @@ def build(arch: str, smoke: bool, sell: str, seq_len: int,
         OptimizerConfig(kind="adamw", lr=lr, groups=SELL_GROUPS),
         cosine_schedule(lr, max(total_steps // 20, 1), total_steps))
     mesh = mesh or make_host_mesh()
-    train_step = steps_mod.make_train_step(model, cfg, opt, accum_steps)
+    if compress_grads and dict(mesh.shape).get("model", 1) > 1:
+        # the compressed shard_map treats params as replicated across the
+        # whole mesh; on a model-parallel mesh that would silently
+        # all-gather the full param tree onto every device
+        raise ValueError("--compress-grads supports data-parallel meshes "
+                         "only (model axis must be 1)")
+    compress_dp = dict(mesh.shape)["data"] if compress_grads else 0
+    train_step = steps_mod.make_train_step(
+        model, cfg, opt, accum_steps,
+        compress_mesh=mesh if compress_grads else None)
 
-    state_abs = steps_mod.abstract_state(model, cfg, opt)
+    state_abs = steps_mod.abstract_state(model, cfg, opt,
+                                         compress_dp=compress_dp)
     state_sh = shard_mod.param_shardings(state_abs, mesh)
+    if compress_grads:
+        # per-rank residuals live on their rank: leading axis over "data"
+        state_sh["grad_error"] = jax.tree.map(
+            lambda _: NamedSharding(mesh, P("data")),
+            state_abs["grad_error"])
 
     data_cfg = DataConfig(
         vocab_size=cfg.vocab_size,
@@ -79,6 +95,37 @@ def build(arch: str, smoke: bool, sell: str, seq_len: int,
     return cfg, model, opt, mesh, jitted, pipeline, state_sh
 
 
+def _restore(ckpt, step, model, cfg, opt, compress_dp, state_sh):
+    """Elastic-safe restore: grad_error residuals are an optimization, not
+    model state, so a checkpoint that lacks them (compression turned on
+    after the save) or carries them for a different data-parallel size
+    (elastic shrink/grow changed the rank axis) restores everything else
+    and re-zeros the residuals instead of silently mis-sharding them."""
+    state_abs = steps_mod.abstract_state(model, cfg, opt,
+                                         compress_dp=compress_dp)
+    try:
+        state = ckpt.restore(step, state_abs, state_sh)
+    except KeyError:
+        if not compress_dp:
+            raise
+        base_abs = {k: v for k, v in state_abs.items() if k != "grad_error"}
+        base_sh = {k: v for k, v in state_sh.items() if k != "grad_error"}
+        state = ckpt.restore(step, base_abs, base_sh)
+        state["grad_error"] = None
+    if compress_dp:
+        err = state.get("grad_error")
+        lead = (jax.tree.leaves(err)[0].shape[0] if err is not None else None)
+        if lead != compress_dp:
+            print(f"[compress] residual rank axis {lead} -> {compress_dp}: "
+                  f"resetting error feedback", flush=True)
+            fresh = jax.tree.map(
+                lambda p: jnp.zeros((compress_dp,) + tuple(p.shape),
+                                    jnp.float32), state["params"])
+            state["grad_error"] = jax.device_put(fresh,
+                                                 state_sh["grad_error"])
+    return state
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b", choices=registry.ARCHS)
@@ -94,11 +141,30 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient all-reduce "
+                         "(repro.dist.compression) over the data axis")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="resolve the mesh via ElasticPolicy from however "
+                         "many devices survived (elastic restart drill); "
+                         "0 = plain host mesh")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.model_parallel > 0:
+        pol = elastic.ElasticPolicy(model_parallel=args.model_parallel)
+        dshape = pol.resolve_mesh(len(jax.devices()))
+        n = dshape[0] * dshape[1]
+        mesh = jax.sharding.Mesh(
+            np.array(jax.devices()[:n]).reshape(dshape), ("data", "model"))
+        print(f"[elastic] resolved mesh data={dshape[0]} model={dshape[1]} "
+              f"from {len(jax.devices())} devices", flush=True)
 
     cfg, model, opt, mesh, jitted, pipeline, state_sh = build(
         args.arch, args.smoke, args.sell, args.seq_len, args.global_batch,
-        args.lr, args.steps, args.accum_steps)
+        args.lr, args.steps, args.accum_steps, mesh=mesh,
+        compress_grads=args.compress_grads)
+    compress_dp = dict(mesh.shape)["data"] if args.compress_grads else 0
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)
     hb = elastic.Heartbeat().install()
@@ -108,13 +174,15 @@ def main(argv=None):
         start_step = 0
         if args.resume and ckpt.latest_step() is not None:
             latest = ckpt.latest_step()
-            state_abs = steps_mod.abstract_state(model, cfg, opt)
-            state = ckpt.restore(latest, state_abs, state_sh)
+            state = _restore(ckpt, latest, model, cfg, opt, compress_dp,
+                             state_sh)
             start_step = int(latest)
             print(f"resumed from step {start_step} (elastic restore onto "
-                  f"{mesh.shape})")
+                  f"{dict(mesh.shape)})", flush=True)
         else:
-            state = steps_mod.init_state(model, cfg, opt, jax.random.PRNGKey(0))
+            state = steps_mod.init_state(model, cfg, opt,
+                                         jax.random.PRNGKey(0),
+                                         compress_dp=compress_dp)
             state = jax.device_put(state, state_sh)
 
         for step in range(start_step, args.steps):

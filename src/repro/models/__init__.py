@@ -7,6 +7,8 @@
     model.loss_fn(params, batch, cfg)        -> scalar loss
     model.init_cache(cfg, batch, max_len)    -> decode cache
     model.decode_step(params, cache, t, pos, cfg) -> (logits, cache)
+    model.prefill(params, cache, tokens, cfg, lengths, fe)
+                                             -> (logits (B,S,V), cache)
 """
 
 from __future__ import annotations
@@ -25,6 +27,7 @@ class Model:
     loss_fn: Callable
     init_cache: Optional[Callable] = None
     decode_step: Optional[Callable] = None
+    prefill: Optional[Callable] = None
     module: Any = None
 
 
@@ -44,5 +47,6 @@ def get_model(cfg: ModelConfig) -> Model:
         loss_fn=mod.loss_fn,
         init_cache=getattr(mod, "init_cache", None),
         decode_step=getattr(mod, "decode_step", None),
+        prefill=getattr(mod, "prefill", None),
         module=mod,
     )

@@ -142,6 +142,57 @@ def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def attention_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Causal self-attention over a whole prompt, keeping K/V for the cache.
+
+    x: (B, S, D) -> (out (B, S, D), k, v (B, S, Hkv, Dh)).  The returned
+    k is post-RoPE — exactly the layout :func:`attention_decode` appends,
+    so a prefill scatter followed by decode steps is state-identical to
+    feeding the prompt token-by-token.
+    """
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    if cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, positions, window, cfg)
+    else:
+        mask = causal_window_mask(positions, positions, window)
+        out = _sdpa(q, k, v, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(*x.shape[:-1], cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, k, v
+
+
+def scatter_prefill_kv(
+    k: jax.Array,                    # (B, S, Hkv, Dh) post-RoPE prompt keys
+    v: jax.Array,
+    lengths: jax.Array,              # (B,) valid prompt length per row
+    max_len: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Lay prompt K/V into a fresh (B, max_len, Hkv, Dh) cache slab.
+
+    Positions >= the row's length are ZERO — :func:`attention_decode`
+    appends additively (cache + onehot * k), so any stale value at a
+    future position would corrupt the first decode write there.  The slab
+    overwrites the slot's previous occupant entirely (continuous batching
+    reuses slots without a separate reset pass).
+    """
+    b, s = k.shape[:2]
+    pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+    valid = (jnp.arange(max_len, dtype=jnp.int32)[None, :]
+             < lengths[:, None])[:, :, None, None]
+    return (jnp.where(valid, jnp.pad(k, pad), 0),
+            jnp.where(valid, jnp.pad(v, pad), 0))
+
+
 def attention(
     params: dict,
     x: jax.Array,
@@ -155,22 +206,12 @@ def attention(
 
     x: (B, S, D); positions: (B, S); window: traced int32 scalar (0=global).
     """
-    xkv = x if kv is None else kv[0]
-    q, k, v = _project_qkv(params, x, xkv, cfg)
     if kv is None:
-        q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
-        if cfg.attn_impl == "chunked":
-            out = _sdpa_chunked(q, k, v, positions, window, cfg)
-            dh = cfg.head_dim_
-            out = out.reshape(*x.shape[:-1], cfg.n_heads * dh)
-            return linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
-                                       cfg.d_model, cfg, "attn_out")
-        mask = causal_window_mask(positions, positions, window)
-    else:
-        # cross-attention: no RoPE, full visibility over encoder states
-        mask = None
-    out = _sdpa(q, k, v, mask, cfg)
+        out, _, _ = attention_prefill(params, x, positions, window, cfg)
+        return out
+    # cross-attention: no RoPE, full visibility over encoder states
+    q, k, v = _project_qkv(params, x, kv[0], cfg)
+    out = _sdpa(q, k, v, None, cfg)
     dh = cfg.head_dim_
     out = out.reshape(*x.shape[:-1], cfg.n_heads * dh)
     return linear.linear_apply(params["wo"], out, cfg.n_heads * dh,

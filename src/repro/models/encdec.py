@@ -178,6 +178,59 @@ def prefill_cross(params: dict, cache: dict, frames: jax.Array,
             "xv": xv.astype(cfg.compute_dtype)}
 
 
+def prefill(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig,
+            lengths=None, frontend_embeds=None):
+    """Batched decoder prompt pass -> (logits (B,S,V), cache).
+
+    If ``frontend_embeds`` is given the encoder runs first
+    (:func:`prefill_cross`); otherwise the cache's existing cross K/V is
+    used — the same precomputed layout :func:`decode_step` reads, so
+    prefill-then-decode agrees with token-at-a-time decode exactly.
+    """
+    if frontend_embeds is not None:
+        cache = prefill_cross(params, cache, frontend_embeds, cfg)
+    b, s = tokens.shape
+    smax = cache["k"].shape[2]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    window = jnp.zeros((), jnp.int32)
+    dh = cfg.head_dim_
+
+    def body(carry, xs):
+        x = carry
+        layer, xk, xv = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, k, v = attn_mod.attention_prefill(layer["attn"], h, positions,
+                                               window, cfg)
+        x = x + out
+        # cross-attention against the precomputed encoder KV
+        h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
+        q = attn_mod.linear.linear_apply(
+            layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
+            cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
+        out = attn_mod._sdpa(q, xk, xv, None, cfg)
+        out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
+        out = attn_mod.linear.linear_apply(
+            layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
+            cfg, "attn_out")
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        ck, cv = attn_mod.scatter_prefill_kv(k, v, lengths, smax)
+        return x, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["decoder"], cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {**cache, "k": new_k.astype(cache["k"].dtype),
+                    "v": new_v.astype(cache["v"].dtype)}
+
+
 def decode_step(params: dict, cache: dict, tokens: jax.Array,
                 position: jax.Array, cfg: ModelConfig):
     dtype = cfg.compute_dtype

@@ -175,6 +175,122 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Prefill: one batched pass over the prompt, recovering the decode caches.
+# ---------------------------------------------------------------------------
+
+def mamba_block_prefill(
+    params: dict,
+    x: jax.Array,            # (B, S, D) right-padded prompt hidden states
+    cfg: ModelConfig,
+    mask: jax.Array,         # (B, S) True at real (non-pad) positions
+    lengths: jax.Array,      # (B,)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Like :func:`mamba_block` but also returns the decode-ready caches.
+
+    Returns ``(y (B,S,D), ssm_state (B,H,P,N) fp32, conv_state (B,W-1,C))``
+    where the states are exactly what ``mamba_block_decode`` would hold
+    after consuming the row's ``length`` tokens one at a time:
+
+    * pad positions get ``dt = 0`` — decay ``exp(0)=1`` and zero input —
+      so the recurrence is frozen beyond each row's length;
+    * the final state is the closed form of the unrolled recurrence,
+      ``h_L = sum_t exp(sum_{s>t} dta_s) * dx_t B_t^T``, one einsum over
+      the cumulative-decay weights instead of a sequential scan;
+    * the conv window is the last ``W-1`` *raw* (pre-silu) conv inputs
+      before the row's length, matching the decode-path layout.
+    """
+    b, s, d = x.shape
+    d_in, n_heads, n_state, conv_dim = _dims(cfg)
+    proj_out = 2 * d_in + 2 * n_state + n_heads
+    zxbcdt = linear.linear_apply(params["in_proj"], x, d, proj_out, cfg, "ssm_in")
+    z, xbc_raw, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+
+    # causal depthwise conv over (x, B, C) — identical to the train path
+    w = params["conv_w"].astype(x.dtype)
+    pad = cfg.conv_width - 1
+    xbc_pad = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + s, :] * w[i]
+        for i in range(cfg.conv_width)
+    ) + params["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(conv)
+
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n_state], axis=-1)
+    xs = xs.reshape(b, s, n_heads, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))               # (H,)
+    maskf = mask.astype(jnp.float32)[..., None]                     # (B,S,1)
+    dta = (dt * a) * maskf                                          # (B,S,H)
+    dx = (xs.astype(jnp.float32) * dt[..., None]) * maskf[..., None]
+
+    # outputs via the parallel chunked SSD (pad S to a chunk multiple with
+    # frozen steps: dta=0 -> decay 1, dx=0 -> no contribution)
+    chunk = min(cfg.ssm_chunk, max(s, 1))
+    s_pad = -(-s // chunk) * chunk
+    tpad = ((0, 0), (0, s_pad - s), (0, 0))
+    y = ssd_chunked(
+        jnp.pad(dx, tpad + ((0, 0),)).astype(x.dtype),
+        jnp.pad(dta, tpad),
+        jnp.pad(bmat, tpad).astype(x.dtype),
+        jnp.pad(cmat, tpad).astype(x.dtype),
+        chunk,
+        unroll=cfg.scan_unroll,
+    )[:, :s]
+    y = y + xs * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"]["scale"], cfg.norm_eps)
+    y = linear.linear_apply(params["out_proj"], y, d_in, d, cfg, "ssm_out")
+
+    # final SSM state: decay-weighted sum of all (masked) contributions
+    a_cum = jnp.cumsum(dta, axis=1)                                 # (B,S,H)
+    weight = jnp.exp(a_cum[:, -1:, :] - a_cum) * maskf
+    ssm_state = jnp.einsum("bsh,bshp,bsn->bhpn", weight, dx,
+                           bmat.astype(jnp.float32) * maskf)
+
+    # conv window: raw inputs at positions [len-W+1, len)
+    idx = lengths[:, None] + jnp.arange(-(cfg.conv_width - 1), 0,
+                                        dtype=jnp.int32)[None, :]   # (B,W-1)
+    valid = (idx >= 0)[..., None]
+    idx = jnp.clip(idx, 0, s - 1)
+    conv_state = jnp.where(
+        valid, jnp.take_along_axis(xbc_raw, idx[..., None], axis=1), 0)
+    return y, ssm_state, conv_state
+
+
+def prefill(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    lengths=None,
+    frontend_embeds=None,
+) -> Tuple[jax.Array, dict]:
+    """Batched prompt pass -> (logits (B,S,V), {"ssm", "conv"} decode cache)."""
+    b, s = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    mask = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+
+    def body(carry, layer):
+        x = carry
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        y, ssm, conv = mamba_block_prefill(layer["mixer"], h, cfg, mask,
+                                           lengths)
+        return x + y, (ssm, conv)
+
+    x, (new_ssm, new_conv) = jax.lax.scan(body, x, params["layers"],
+                                          unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"ssm": new_ssm.astype(cache["ssm"].dtype),
+                    "conv": new_conv.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
 # Decode path: recurrent state update, O(1) per token.
 # ---------------------------------------------------------------------------
 

@@ -141,6 +141,57 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
                                   cfg.compute_dtype)
 
 
+def prefill(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                       # (B, S) right-padded prompts
+    cfg: ModelConfig,
+    lengths: Optional[jax.Array] = None,     # (B,) valid length per row
+    frontend_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One lowered forward over the whole prompt -> (logits (B,S,V), cache).
+
+    The layer scan mirrors :func:`backbone` but keeps each layer's K/V and
+    scatters them into the cache slab (positions >= the row's length are
+    zeroed; see :func:`repro.models.attention.scatter_prefill_kv`).  With
+    right padding the causal mask already keeps pad tokens out of every
+    real position's context, so ragged batches need no extra masking here.
+    """
+    b, s = tokens.shape
+    smax = cache["k"].shape[2]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+    if frontend_embeds is not None:
+        p = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x[:, p:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        x = carry
+        layer, window = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, k, v = attn_mod.attention_prefill(layer["attn"], h, positions,
+                                               window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        if "moe" in layer:
+            x = x + mlp_mod.moe(layer["moe"], h, cfg)
+        else:
+            x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        ck, cv = attn_mod.scatter_prefill_kv(k, v, lengths, smax)
+        return x, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, (params["layers"], windows),
+                                     unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"k": new_k.astype(cache["k"].dtype),
+                    "v": new_v.astype(cache["v"].dtype)}
+
+
 def decode_step(
     params: dict,
     cache: dict,

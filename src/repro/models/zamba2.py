@@ -108,6 +108,68 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Prefill: batched prompt pass filling SSM states + shared-block KV.
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig,
+            lengths=None, frontend_embeds=None):
+    """Mirror of :func:`apply` that keeps every decode cache: per-layer SSM
+    and conv states from the mamba groups, plus K/V for each application of
+    the shared attention block -> (logits (B,S,V), cache)."""
+    b, s = tokens.shape
+    smax = cache["attn_k"].shape[2]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    mask = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    dtype = cfg.compute_dtype
+    emb = embed_lookup(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    window = jnp.zeros((), jnp.int32)
+    d = cfg.d_model
+
+    def body(carry, layer):
+        x = carry
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        y, ssm, conv = mamba_mod.mamba_block_prefill(layer["mixer"], h, cfg,
+                                                     mask, lengths)
+        return x + y, (ssm, conv)
+
+    x = emb
+    start = 0
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for size in _n_groups(cfg):
+        group = jax.tree.map(lambda p: p[start : start + size],
+                             params["layers"])
+        x, (ssm, conv) = jax.lax.scan(body, x, group, unroll=cfg.scan_unroll)
+        new_ssm.append(ssm)
+        new_conv.append(conv)
+        # shared attention application, keeping its K/V
+        h = linear.linear_apply(params["shared"]["in_proj"],
+                                jnp.concatenate([x, emb], axis=-1),
+                                2 * d, d, cfg, "shared_in")
+        a = rms_norm(h, params["shared"]["norm1"]["scale"], cfg.norm_eps)
+        out, k, v = attn_mod.attention_prefill(params["shared"]["attn"], a,
+                                               positions, window, cfg)
+        h = h + out
+        m = rms_norm(h, params["shared"]["norm2"]["scale"], cfg.norm_eps)
+        h = h + mlp_mod.mlp(params["shared"]["mlp"], m, cfg)
+        x = x + h
+        ck, cv = attn_mod.scatter_prefill_kv(k, v, lengths, smax)
+        new_k.append(ck)
+        new_v.append(cv)
+        start += size
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {
+        "ssm": jnp.concatenate(new_ssm, axis=0).astype(cache["ssm"].dtype),
+        "conv": jnp.concatenate(new_conv, axis=0).astype(cache["conv"].dtype),
+        "attn_k": jnp.stack(new_k, axis=0).astype(cache["attn_k"].dtype),
+        "attn_v": jnp.stack(new_v, axis=0).astype(cache["attn_v"].dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Decode: mamba states + KV caches for each shared-block application.
 # ---------------------------------------------------------------------------
 

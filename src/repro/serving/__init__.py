@@ -1,9 +1,51 @@
-"""Serving substrate (see also repro/launch/serve.py).
+"""Serving engine: batched prefill + continuous batching over the model zoo.
 
-The decode machinery lives with its models (KV caches in
-repro/models/attention.py, SSM state caches in repro/models/mamba2.py) and
-the step builder in repro/dist/steps.py; this package re-exports the
-public serving surface.
+Why this package exists: ACDC's pitch is cheap inference — O(N) parameters,
+O(N log N) operations per structured projection — and the serving layer is
+where that cost advantage is actually cashed in.  This package turns the
+model zoo's decode machinery (KV caches in ``repro/models/attention.py``,
+SSM/conv state in ``repro/models/mamba2.py``) into an engine.
+
+Request lifecycle
+-----------------
+A :class:`Request` (``request.py``) carries a ragged-length prompt plus its
+stop conditions (``eos_id``, ``max_new_tokens``).  ``Engine.submit``
+validates it and hands it to the FIFO :class:`Scheduler` (``scheduler.py``)
+as QUEUED.  When a batch slot frees up it becomes ACTIVE: one lowered
+**prefill** program (``make_prefill_step``) runs the whole prompt, scatters
+the resulting KV / SSM state into the slot's cache row, and samples the
+first token — the time-to-first-token mark.  Each subsequent engine tick
+advances it one token; EOS / token-budget / cache-ceiling stops flip it to
+FINISHED (``finish_reason``) and release the slot.
+
+Slot model
+----------
+The :class:`Engine` (``engine.py``) owns a fixed-shape cache with
+``n_slots`` batch rows (max_len positions each).  Prefill writes a slot's
+entire row — positions at or beyond the prompt length are zeroed, because
+the decode path scatters additively — so slots are reused without a reset
+pass.  Free slots ride through decode parked at ``position = max_len``,
+where the one-hot scatter writes nothing.  Per-request compute is
+batch-row-independent, so outputs are identical to running each request
+alone (pinned by tests/test_serving_engine.py).
+
+Tick loop
+---------
+``tick()`` = admit (0+ prefill dispatches, one per admission) + one fused
+decode step over all ``n_slots`` rows + evict.  All shapes are static, so
+the engine compiles exactly two programs — one prefill, one decode — no
+matter how traffic arrives.  ``run(requests)`` ticks until drained.
+
+Sampling (``sampler.py``) is shared between the fused decode step and the
+admission path: greedy, or temperature with top-k / top-p filtering.
 """
 
-from repro.dist.steps import make_serve_step  # noqa: F401
+from repro.dist.steps import make_prefill_step, make_serve_step  # noqa: F401
+from repro.serving.engine import Engine  # noqa: F401
+from repro.serving.request import Request, RequestStatus  # noqa: F401
+from repro.serving.sampler import (  # noqa: F401
+    apply_top_k,
+    apply_top_p,
+    sample,
+)
+from repro.serving.scheduler import Scheduler  # noqa: F401

@@ -1,0 +1,191 @@
+"""Continuous-batching serving engine over the model zoo's decode caches.
+
+The engine owns a fixed-shape cache with ``n_slots`` batch rows and runs a
+tick loop:
+
+1. **admit** — while a slot is free and requests are queued, the oldest
+   request is admitted: ONE lowered prefill program runs its whole
+   (right-padded) prompt, the resulting per-slot KV / SSM state is
+   scattered into the slot's cache row, and the first token is sampled
+   from the last-position logits (this is also the time-to-first-token
+   mark);
+2. **decode** — one fused decode step advances EVERY active slot by one
+   token; free slots ride along parked at ``position = max_len`` where the
+   one-hot cache scatter writes nothing;
+3. **evict** — requests that hit EOS, their ``max_new_tokens`` budget, or
+   the cache ceiling release their slot immediately, so the next tick's
+   admission refills the batch.
+
+All shapes are static — prompts pad to ``max_prompt_len``, the decode batch
+is always ``n_slots`` wide — so the engine compiles exactly two programs
+(one prefill, one decode) regardless of traffic.  Per-request compute is
+batch-row-independent (each slot attends only to its own cache row), so a
+request's output stream is identical to running it alone; the engine test
+pins that down.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import steps as steps_mod
+from repro.serving import sampler as sampler_mod
+from repro.serving.request import Request, RequestStatus
+from repro.serving.scheduler import Scheduler
+
+
+class Engine:
+    def __init__(
+        self,
+        model,
+        cfg,
+        params,
+        n_slots: int = 4,
+        max_len: int = 128,
+        max_prompt_len: Optional[int] = None,
+        sample: str = "greedy",
+        temperature: float = 1.0,
+        top_k: int = 0,
+        top_p: float = 0.0,
+        rng: Optional[jax.Array] = None,
+    ):
+        if model.prefill is None or model.decode_step is None:
+            raise ValueError(f"family {cfg.family!r} cannot serve")
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.max_prompt_len = max_prompt_len or max_len // 2
+        self.scheduler = Scheduler(n_slots)
+        self._rng = jax.random.PRNGKey(0) if rng is None else rng
+
+        self._cache = model.init_cache(cfg, n_slots, max_len)
+        # template for per-admission prefill: batch-1, same max_len slabs
+        self._slot_template = model.init_cache(cfg, 1, max_len)
+        self._tokens = np.zeros((n_slots,), np.int32)
+        self._positions = np.full((n_slots,), max_len, np.int32)  # parked
+
+        # the big cache is donated through decode/insert: it is the dominant
+        # serving allocation and both calls replace self._cache wholesale,
+        # so XLA can update the buffers in place instead of copying the
+        # whole multi-layer slab every tick
+        self._prefill = jax.jit(steps_mod.make_prefill_step(model, cfg))
+        self._decode = jax.jit(steps_mod.make_serve_step(
+            model, cfg, sample=sample, temperature=temperature,
+            top_k=top_k, top_p=top_p), donate_argnums=(1,))
+        self._sample = jax.jit(functools.partial(
+            sampler_mod.sample, method=sample, temperature=temperature,
+            top_k=top_k, top_p=top_p))
+
+        def insert(cache, slot_cache, slot):
+            return jax.tree.map(
+                lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                    c, s.astype(c.dtype), slot, axis=1),
+                cache, slot_cache)
+
+        self._insert = jax.jit(insert, donate_argnums=(0,))
+        self.stats = {"prefill_dispatches": 0, "decode_ticks": 0,
+                      "tokens_out": 0, "finished": 0}
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.prompt_len < 1:
+            raise ValueError(f"request {request.rid}: empty prompt")
+        if request.prompt_len > self.max_prompt_len:
+            raise ValueError(
+                f"request {request.rid}: prompt {request.prompt_len} > "
+                f"max_prompt_len {self.max_prompt_len}")
+        if self.cfg.family == "encdec" and request.frontend_embeds is None:
+            # without frames the cross-KV stays all-zero: the request would
+            # "succeed" while conditioning on a null encoder
+            raise ValueError(
+                f"request {request.rid}: encdec family needs "
+                f"frontend_embeds")
+        request.t_submit = time.time()
+        self.scheduler.submit(request)
+
+    # -- tick loop --------------------------------------------------------
+
+    def tick(self) -> int:
+        """Admit + one fused decode step; returns #active slots advanced."""
+        for slot, req in self.scheduler.admit():
+            self._admit(slot, req)
+        active = self.scheduler.active()
+        if active:
+            rng = jax.random.fold_in(self._rng, 1 << 20
+                                     | self.stats["decode_ticks"])
+            tok, self._cache = self._decode(
+                self.params, self._cache, jnp.asarray(self._tokens),
+                jnp.asarray(self._positions), rng)
+            tok_np = np.asarray(tok)
+            self.stats["decode_ticks"] += 1
+            now = time.time()
+            for slot, req in active:
+                t = int(tok_np[slot])
+                req.generated.append(t)
+                self.stats["tokens_out"] += 1
+                self._positions[slot] += 1
+                self._tokens[slot] = t
+                self._maybe_finish(slot, req, t, now)
+        return len(active)
+
+    def run(self, requests: Sequence[Request],
+            max_ticks: Optional[int] = None) -> List[Request]:
+        """Submit everything, tick until drained, return the requests."""
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while self.scheduler.has_work:
+            self.tick()
+            ticks += 1
+            if max_ticks is not None and ticks > max_ticks:
+                raise RuntimeError(f"engine not drained after {ticks} ticks")
+        return list(requests)
+
+    # -- internals --------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request) -> None:
+        p = self.max_prompt_len
+        toks = np.zeros((1, p), np.int32)
+        toks[0, : req.prompt_len] = np.asarray(req.prompt, np.int32)
+        lengths = jnp.asarray([req.prompt_len], jnp.int32)
+        fe = getattr(req, "frontend_embeds", None)
+        last_logits, slot_cache = self._prefill(
+            self.params, self._slot_template, jnp.asarray(toks), lengths, fe)
+        self.stats["prefill_dispatches"] += 1
+        self._cache = self._insert(self._cache, slot_cache,
+                                   jnp.int32(slot))
+        tok = int(self._sample(jax.random.fold_in(self._rng, req.rid),
+                               last_logits)[0])
+        req.t_first_token = time.time()
+        req.generated.append(tok)
+        self.stats["tokens_out"] += 1
+        self._tokens[slot] = tok
+        self._positions[slot] = req.prompt_len
+        self._maybe_finish(slot, req, tok, req.t_first_token)
+
+    def _maybe_finish(self, slot: int, req: Request, last_token: int,
+                      now: float) -> None:
+        reason = None
+        if req.eos_id is not None and last_token == req.eos_id:
+            reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            reason = "length"
+        elif self._positions[slot] >= self.max_len:
+            reason = "cache_full"   # no room to write the next token
+        if reason is None:
+            return
+        req.status = RequestStatus.FINISHED
+        req.finish_reason = reason
+        req.t_finish = now
+        self.scheduler.release(slot)
+        self._positions[slot] = self.max_len      # park: no cache writes
+        self.stats["finished"] += 1

@@ -1,0 +1,76 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request is QUEUED on submit, ACTIVE while it owns a batch slot (from the
+prefill admission until its stop condition), and FINISHED once it hit EOS
+(``finish_reason="eos"``), generated ``max_new_tokens``
+(``finish_reason="length"``), or ran into the cache ceiling
+(``finish_reason="cache_full"``).  The engine mutates ``generated`` /
+``status`` in place; everything else is caller-owned input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    ACTIVE = "active"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]                 # token ids, ragged lengths ok
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None          # None: never stops on a token
+    # (1, F, D) modality-frontend embeddings for encdec/vision families
+    frontend_embeds: Optional[object] = None
+
+    # engine-managed fields
+    status: RequestStatus = RequestStatus.QUEUED
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+    slot: Optional[int] = None
+    # wall-clock marks for time-to-first-token / latency accounting
+    t_submit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.status is RequestStatus.FINISHED
+
+
+def make_ragged_requests(vocab_size: int, n: int, max_prompt_len: int,
+                         max_new_tokens: int, seed: int = 0,
+                         vary_budget: bool = False) -> List[Request]:
+    """Deterministic ragged-length synthetic request stream.
+
+    Shared by the serve launcher and bench_serve so A/B runs and the
+    benchmark exercise the same workload.  Prompt lengths draw uniformly
+    from [max_prompt_len/4, max_prompt_len]; ``vary_budget`` also draws
+    ``max_new_tokens`` from [max/2, max].
+    """
+    rs = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        plen = int(rs.randint(max(max_prompt_len // 4, 1),
+                              max_prompt_len + 1))
+        budget = max_new_tokens
+        if vary_budget:
+            budget = int(rs.randint(max(max_new_tokens // 2, 1),
+                                    max_new_tokens + 1))
+        out.append(Request(
+            rid=i, prompt=rs.randint(0, vocab_size, size=plen).tolist(),
+            max_new_tokens=budget))
+    return out

@@ -1,0 +1,71 @@
+"""Token sampling: greedy / temperature with top-k and top-p (nucleus)
+filtering.
+
+Shared by :func:`repro.dist.steps.make_serve_step` (the fused decode step
+samples on-device so only int32 token ids leave the accelerator) and the
+continuous-batching engine's prefill admissions.  Filters follow the usual
+order: temperature scaling first, then top-k, then top-p — top-k is
+temperature-invariant (monotonic scaling preserves rank) but the nucleus
+set is not, so the order is observable and pinned by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30  # large-but-finite: keeps all-masked rows NaN-free
+
+
+def apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    """Mask everything below the k-th largest logit.  ``k <= 0`` disables.
+
+    Ties with the k-th value are kept (the kept set can exceed ``k`` only
+    when logits are exactly equal — the standard tie-break-free contract).
+    """
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < kth, _NEG_INF, logits)
+
+
+def apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    """Nucleus filtering: keep the smallest prefix of the probability-sorted
+    vocab whose cumulative mass reaches ``p``; mask the rest.
+
+    The top-1 token is always kept (its *preceding* mass is 0 < p), so the
+    result is never fully masked.  ``p <= 0`` or ``p >= 1`` disables.
+    """
+    if p <= 0.0 or p >= 1.0:
+        return logits
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    probs = jax.nn.softmax(sorted_desc.astype(jnp.float32), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < p          # mass strictly before this token
+    thresh = jnp.min(jnp.where(keep, sorted_desc, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits < thresh, _NEG_INF, logits)
+
+
+def sample(
+    rng: jax.Array,
+    logits: jax.Array,               # (..., V)
+    method: str = "greedy",
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 0.0,
+) -> jax.Array:
+    """Draw int32 token ids from ``logits``.
+
+    ``method`` is "greedy" (argmax; filters/temperature are irrelevant) or
+    "temp" (categorical over temperature-scaled, top-k/top-p-filtered
+    logits).
+    """
+    if method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if method != "temp":
+        raise ValueError(f"unknown sampler {method!r}")
+    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    lf = apply_top_k(lf, top_k)
+    lf = apply_top_p(lf, top_p)
+    return jax.random.categorical(rng, lf, axis=-1).astype(jnp.int32)

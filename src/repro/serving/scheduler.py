@@ -1,0 +1,67 @@
+"""Slot scheduler for continuous batching.
+
+The engine owns a fixed-shape cache with ``n_slots`` batch rows; this class
+owns the mapping requests -> slots.  Policy is FIFO admission: whenever a
+slot is free and the queue is non-empty, the oldest queued request is
+admitted (prefill runs for it, then it joins the fused per-tick decode).
+Finished requests release their slot immediately, so under a steady
+arrival stream the batch stays full — the whole point of continuous over
+static batching: no slot idles while a long request drains.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.serving.request import Request, RequestStatus
+
+
+class Scheduler:
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        if request.status is not RequestStatus.QUEUED:
+            raise ValueError(f"request {request.rid} already {request.status}")
+        self.queue.append(request)
+
+    # -- admission / release ---------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queue (FIFO); returns admissions."""
+        out = []
+        for slot in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            req.status = RequestStatus.ACTIVE
+            req.slot = slot
+            self.slots[slot] = req
+            out.append((slot, req))
+        return out
+
+    def release(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} already free")
+        req.slot = None
+        self.slots[slot] = None
+
+    # -- views ------------------------------------------------------------
+
+    def active(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

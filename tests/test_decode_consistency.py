@@ -133,6 +133,114 @@ def test_serve_step_greedy_matches_prefill_argmax(arch):
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
 
 
+# ---------------------------------------------------------------------------
+# Batched prefill: one lowered program must reproduce the token-at-a-time
+# decode path — logits AND cache state — for every model family.
+# ---------------------------------------------------------------------------
+
+PREFILL_FAMS = [
+    ("qwen3_1_7b", "decoder"),
+    ("mamba2_1_3b", "ssm"),
+    ("zamba2_1_2b", "hybrid"),
+    ("seamless_m4t_large_v2", "encdec"),
+    ("deepseek_moe_16b", "moe"),
+]
+
+
+def _prefill_fixture(arch):
+    cfg = registry.get_smoke_config(arch)
+    if cfg.n_experts:
+        # dropless routing, as in test_decode_matches_prefill: capacity-based
+        # drops depend on how many tokens compete per dispatch
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng, cfg)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.fold_in(rng, 1), (b, s), 0,
+                              cfg.vocab_size)
+    frames = None
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (b, cfg.n_frontend_tokens,
+                                         cfg.d_model))
+    return cfg, model, params, toks, frames
+
+
+@pytest.mark.parametrize("arch", [a for a, _ in PREFILL_FAMS])
+def test_prefill_matches_decode_logits(arch):
+    """Ragged batched prefill == step-by-step decode at every valid
+    position, for all four families (+ MoE): the acceptance invariant for
+    the serving engine's admission path."""
+    cfg, model, params, toks, frames = _prefill_fixture(arch)
+    b, s = toks.shape
+    lengths = jnp.array([s, s - 5], jnp.int32)
+
+    cache = model.init_cache(cfg, b, s + 4)
+    logits_pre, cache_pre = model.prefill(params, cache, toks, cfg, lengths,
+                                          frames)
+
+    cache_seq = model.init_cache(cfg, b, s + 4)
+    if cfg.family == "encdec":
+        cache_seq = model.module.prefill_cross(params, cache_seq, frames, cfg)
+    outs = []
+    for i in range(s):
+        lg, cache_seq = model.decode_step(params, cache_seq, toks[:, i],
+                                          jnp.full((b,), i, jnp.int32), cfg)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+
+    for row in range(b):
+        ln = int(lengths[row])
+        np.testing.assert_allclose(
+            np.asarray(logits_pre[row, :ln]), np.asarray(dec[row, :ln]),
+            atol=2e-3, rtol=1e-2)
+
+    # the caches must also agree: continue decoding one step from each and
+    # compare — this catches KV scatter, RoPE offset and SSM-state bugs that
+    # the prompt logits alone cannot see.  Row 1 is ragged (length s-5), so
+    # its continuation runs at position s-5 in the padded batch.
+    nxt = jnp.argmax(
+        jnp.take_along_axis(logits_pre, (lengths - 1)[:, None, None],
+                            axis=1)[:, 0], axis=-1).astype(jnp.int32)
+    lg_a, _ = model.decode_step(params, cache_pre, nxt, lengths, cfg)
+    # full-length row 0: sequential cache is positioned at s == lengths[0]
+    lg_b, _ = model.decode_step(params, cache_seq, nxt, lengths, cfg)
+    np.testing.assert_allclose(np.asarray(lg_a[0]), np.asarray(lg_b[0]),
+                               atol=2e-3, rtol=1e-2)
+
+    # ragged row 1: reference is feeding ONLY its l tokens alone
+    ln = int(lengths[1])
+    cache_1 = model.init_cache(cfg, 1, s + 4)
+    if cfg.family == "encdec":
+        cache_1 = model.module.prefill_cross(params, cache_1, frames[1:2],
+                                             cfg)
+    for i in range(ln):
+        _, cache_1 = model.decode_step(params, cache_1, toks[1:2, i],
+                                       jnp.full((1,), i, jnp.int32), cfg)
+    lg_solo, _ = model.decode_step(params, cache_1, nxt[1:2],
+                                   jnp.full((1,), ln, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(lg_a[1]), np.asarray(lg_solo[0]),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_prefill_step_builder_last_logits():
+    """make_prefill_step picks each row's last REAL position's logits."""
+    from repro.dist import steps as steps_mod
+
+    cfg, model, params, toks, _ = _prefill_fixture("qwen3_1_7b")
+    b, s = toks.shape
+    lengths = jnp.array([s, s - 7], jnp.int32)
+    cache = model.init_cache(cfg, b, s + 2)
+    full_step = steps_mod.make_prefill_step(model, cfg, full_logits=True)
+    last_step = steps_mod.make_prefill_step(model, cfg)
+    full, _ = full_step(params, cache, toks, lengths)
+    last, _ = last_step(params, cache, toks, lengths)
+    for row in range(b):
+        np.testing.assert_allclose(
+            np.asarray(last[row]), np.asarray(full[row, int(lengths[row]) - 1]),
+            atol=0, rtol=0)
+
+
 def test_ssd_chunked_equals_recurrence():
     """State-space duality: the chunked (train) algorithm equals the naive
     recurrent scan for random inputs."""

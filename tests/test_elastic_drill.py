@@ -1,0 +1,98 @@
+"""End-to-end elastic restart drill: kill -> shrink -> resume.
+
+Phase 1 trains on 8 (forced host) devices with the mesh resolved by
+``ElasticPolicy`` (data=4, model=2), gets SIGTERM'd mid-run, and must
+drain: checkpoint the in-flight state and exit cleanly.  Phase 2 restarts
+with half the devices — simulating the loss of a replica — resolves the
+shrunken (data=2, model=2) mesh, restores the SAME checkpoint onto it
+(the manager stores global-layout arrays, so restore re-shards), and
+trains to completion.  This is the ROADMAP drill item: ``resolve_mesh``
+and elastic checkpoint restore exercised together, not separately.
+
+Runs in subprocesses because the forced device count must be set before
+jax initializes (tests otherwise see the real single CPU device).
+"""
+
+import os
+import selectors
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return env
+
+
+def _cmd(steps: int, ckpt_dir: str, resume: bool = False):
+    cmd = [sys.executable, "-u", "-m", "repro.launch.train",
+           "--arch", "qwen3_1_7b", "--smoke", "--steps", str(steps),
+           "--seq-len", "32", "--global-batch", "8",
+           "--ckpt-dir", ckpt_dir, "--ckpt-every", "2",
+           "--model-parallel", "2", "--log-every", "1"]
+    if resume:
+        cmd.append("--resume")
+    return cmd
+
+
+@pytest.mark.slow
+def test_elastic_kill_shrink_resume(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+
+    # -- phase 1: 8 devices, SIGTERM after a few steps ---------------------
+    proc = subprocess.Popen(
+        _cmd(steps=60, ckpt_dir=ckpt), cwd=REPO, env=_env(8),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    # select-based read so a hung child hits OUR deadline instead of
+    # blocking the stdout iteration forever
+    sel = selectors.DefaultSelector()
+    sel.register(proc.stdout, selectors.EVENT_READ)
+    lines = []
+    sent = False
+    deadline = time.time() + 420
+    while time.time() < deadline and not sent:
+        if not sel.select(timeout=10):
+            continue
+        line = proc.stdout.readline()
+        if not line:
+            break
+        lines.append(line)
+        if line.startswith("step") and int(line.split()[1]) >= 3:
+            proc.send_signal(signal.SIGTERM)
+            sent = True
+    if not sent:
+        proc.kill()
+        pytest.fail("phase 1 never reached step 3:\n" + "".join(lines)[-2000:])
+    rest, _ = proc.communicate(timeout=300)
+    out1 = "".join(lines) + rest
+    assert proc.returncode == 0, out1
+    assert "[elastic] resolved mesh data=4 model=2 from 8 devices" in out1
+    assert "[preempt] SIGTERM received" in out1
+
+    from repro.checkpoint import CheckpointManager
+    saved = CheckpointManager(ckpt).latest_step()
+    assert saved is not None and saved >= 3, out1
+    assert saved < 60, "drain must not mislabel the final step"
+
+    # -- phase 2: half the devices, resume onto the shrunken mesh ----------
+    final_steps = saved + 4
+    out2 = subprocess.run(
+        _cmd(steps=final_steps, ckpt_dir=ckpt, resume=True), cwd=REPO,
+        env=_env(4), capture_output=True, text=True, timeout=420)
+    assert out2.returncode == 0, out2.stdout + out2.stderr
+    assert "[elastic] resolved mesh data=2 model=2 from 4 devices" \
+        in out2.stdout
+    assert f"resumed from step {saved}" in out2.stdout
+    assert f"step {final_steps - 1:5d}" in out2.stdout
+    assert "done." in out2.stdout
+    assert CheckpointManager(ckpt).latest_step() == final_steps

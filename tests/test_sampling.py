@@ -1,0 +1,154 @@
+"""Unit tests for the top-k / top-p filtering math in repro.serving.sampler
+and its integration into make_serve_step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import apply_top_k, apply_top_p, sample
+
+NEG = -1e29     # anything below this counts as "masked"
+
+
+def _kept(filtered):
+    return set(np.flatnonzero(np.asarray(filtered) > NEG).tolist())
+
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+def test_top_k_keeps_k_largest():
+    logits = jnp.array([0.1, 3.0, -1.0, 2.0, 0.5])
+    assert _kept(apply_top_k(logits, 2)) == {1, 3}
+    assert _kept(apply_top_k(logits, 1)) == {1}
+    # kept values are untouched
+    out = np.asarray(apply_top_k(logits, 2))
+    np.testing.assert_allclose(out[[1, 3]], [3.0, 2.0])
+
+
+def test_top_k_disabled_and_full():
+    logits = jnp.array([0.1, 3.0, -1.0])
+    np.testing.assert_array_equal(np.asarray(apply_top_k(logits, 0)),
+                                  np.asarray(logits))
+    np.testing.assert_array_equal(np.asarray(apply_top_k(logits, 3)),
+                                  np.asarray(logits))
+    np.testing.assert_array_equal(np.asarray(apply_top_k(logits, 99)),
+                                  np.asarray(logits))
+
+
+def test_top_k_ties_at_threshold_kept():
+    logits = jnp.array([2.0, 2.0, 1.0, 0.0])
+    # k=1 with a tie at the max: both tied tokens survive (documented)
+    assert _kept(apply_top_k(logits, 1)) == {0, 1}
+
+
+def test_top_k_batched():
+    logits = jnp.array([[0.0, 1.0, 2.0], [5.0, -1.0, 0.0]])
+    out = np.asarray(apply_top_k(logits, 1))
+    assert _kept(out[0]) == {2}
+    assert _kept(out[1]) == {0}
+
+
+# ---------------------------------------------------------------------------
+# top-p
+# ---------------------------------------------------------------------------
+
+def test_top_p_nucleus_boundary():
+    # probs = [0.5, 0.3, 0.15, 0.05] (descending by construction)
+    probs = np.array([0.5, 0.3, 0.15, 0.05])
+    logits = jnp.asarray(np.log(probs))
+    # mass before token0 = 0, before token1 = 0.5, before token2 = 0.8:
+    # p=0.7 keeps {0,1}; p=0.85 keeps {0,1,2}; p=0.4 keeps {0}
+    assert _kept(apply_top_p(logits, 0.7)) == {0, 1}
+    assert _kept(apply_top_p(logits, 0.85)) == {0, 1, 2}
+    assert _kept(apply_top_p(logits, 0.4)) == {0}
+
+
+def test_top_p_always_keeps_argmax():
+    logits = jnp.array([10.0, 0.0, -5.0])
+    assert _kept(apply_top_p(logits, 1e-6)) == {0}
+
+
+def test_top_p_disabled():
+    logits = jnp.array([0.3, 0.2, 0.1])
+    for p in (0.0, 1.0, -1.0, 2.0):
+        np.testing.assert_array_equal(np.asarray(apply_top_p(logits, p)),
+                                      np.asarray(logits))
+
+
+def test_top_p_unsorted_input_order_irrelevant():
+    probs = np.array([0.15, 0.5, 0.05, 0.3])       # shuffled
+    logits = jnp.asarray(np.log(probs))
+    assert _kept(apply_top_p(logits, 0.7)) == {1, 3}
+
+
+def test_top_p_batched_rows_independent():
+    logits = jnp.asarray(np.log(np.array([
+        [0.97, 0.01, 0.01, 0.01],
+        [0.40, 0.30, 0.20, 0.10],
+    ])))
+    out = apply_top_p(logits, 0.6)
+    assert _kept(out[0]) == {0}
+    # row 1: mass before token1 = 0.4 < 0.6, before token2 = 0.7 >= 0.6
+    assert _kept(out[1]) == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# sample() composition
+# ---------------------------------------------------------------------------
+
+def test_sample_greedy_is_argmax():
+    logits = jnp.array([[0.0, 5.0, 1.0], [2.0, 0.0, -1.0]])
+    out = sample(jax.random.PRNGKey(0), logits, method="greedy")
+    np.testing.assert_array_equal(np.asarray(out), [1, 0])
+    assert out.dtype == jnp.int32
+
+
+def test_sample_temp_top_k1_equals_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    got = sample(jax.random.PRNGKey(2), logits, method="temp",
+                 temperature=5.0, top_k=1)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_temp_respects_nucleus():
+    probs = np.array([0.6, 0.3, 0.06, 0.04])
+    logits = jnp.broadcast_to(jnp.asarray(np.log(probs)), (64, 4))
+    got = np.asarray(sample(jax.random.PRNGKey(3), logits, method="temp",
+                            top_p=0.7))
+    assert set(got.tolist()) <= {0, 1}
+
+
+def test_sample_rejects_unknown_method():
+    with pytest.raises(ValueError):
+        sample(jax.random.PRNGKey(0), jnp.zeros((4,)), method="beam")
+
+
+def test_serve_step_top_k_matches_greedy():
+    """make_serve_step with temp+top_k=1 must follow the greedy stream —
+    the integration point of the sampler into the fused decode step."""
+    from repro.configs import registry
+    from repro.dist import steps as steps_mod
+    from repro.models import get_model
+
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    model = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng, cfg)
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.fold_in(rng, 1), (b, s), 0,
+                              cfg.vocab_size)
+    greedy = jax.jit(steps_mod.make_serve_step(model, cfg, sample="greedy"))
+    topk1 = jax.jit(steps_mod.make_serve_step(model, cfg, sample="temp",
+                                              temperature=3.0, top_k=1))
+    cg = model.init_cache(cfg, b, s + 1)
+    ck = model.init_cache(cfg, b, s + 1)
+    for i in range(s):
+        pos = jnp.full((b,), i, jnp.int32)
+        tg, cg = greedy(params, cg, toks[:, i], pos, rng)
+        tk, ck = topk1(params, ck, toks[:, i], pos,
+                       jax.random.fold_in(rng, i))
+        np.testing.assert_array_equal(np.asarray(tg), np.asarray(tk))
