@@ -1,0 +1,23 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_us(fn, *args, iters: int = 20) -> float:
+    """Mean wall-clock microseconds per call over ``iters`` dispatches.
+
+    One warmup dispatch absorbs jit compilation; ``jax.block_until_ready``
+    handles scalar, tuple and pytree returns uniformly (a conditional
+    double-call here once double-dispatched every warmup and skewed
+    small-N numbers — keep it a single call).
+    """
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

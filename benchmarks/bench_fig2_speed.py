@@ -14,8 +14,6 @@ CSV: name,us_per_call,derived
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,14 +28,7 @@ PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
 
 
-def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+from benchmarks._util import time_us as _time
 
 
 def roofline_acdc_us(n: int, batch: int, fused: bool) -> float:

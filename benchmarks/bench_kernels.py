@@ -1,0 +1,156 @@
+"""Kernel-level benchmark for the fused ACDC training hot path.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--quick]
+
+Two views, written to ``results/BENCH_kernels.json``:
+
+1. **Analytic roofline bytes-per-row model** (the paper's section 5
+   accounting, exact on any hardware): per-row HBM traffic of
+
+   * the fused forward           (8N: read row + write row, fp32),
+   * the per-layer order-K scan  (8KN: every layer round-trips HBM),
+   * the whole-cascade fused fwd (8N, INDEPENDENT of K — the tentpole),
+   * the old four-matmul XLA backward (48N: gc/h2/dh1 each round-trip),
+   * the fused Pallas backward   (12N: read x + read g + write dx).
+
+   Transform-matrix traffic is excluded: C/C^T are O(N^2) one-offs
+   amortized over the batch in every variant equally.
+
+2. **Wall-clock** of the real code paths on this host (interpret mode on
+   CPU — directional only, the container is not the target hardware;
+   compiled kernels on TPU) for fwd, bwd (via ``jax.vjp``) and order-K
+   cascades fused vs per-layer.
+
+This seeds the repo's perf trajectory: future PRs diff this JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import time_us as _time
+from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import ops
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+FP32 = 4  # bytes; the kernels' HBM-facing activation width in this repo
+
+
+def per_row_bytes(n: int, k: int = 1) -> dict:
+    """Analytic per-row HBM bytes for each implementation variant."""
+    return {
+        "fwd_fused": 2 * FP32 * n,                 # 8N: x in, y out
+        "fwd_per_layer_cascade": 2 * FP32 * n * k,  # 8KN: K round trips
+        "fwd_cascade_fused": 2 * FP32 * n,          # 8N independent of K
+        "bwd_four_matmul_xla": 12 * FP32 * n,       # 48N: x,g,dx + 3 inter-
+                                                    # mediates x2 (wr+rd) +
+                                                    # 3 reduction re-reads
+        "bwd_fused": 3 * FP32 * n,                  # 12N: x, g in; dx out
+    }
+
+
+
+def bench_layer(n: int, m: int, iters: int) -> dict:
+    r = jax.random.PRNGKey(n)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    g = jax.random.normal(jax.random.fold_in(r, 3), (m, n))
+
+    fwd = jax.jit(ops.acdc_fused_nobias)
+
+    @jax.jit
+    def bwd(x, a, d, g):
+        _, vjp = jax.vjp(ops.acdc_fused_nobias, x, a, d)
+        return vjp(g)
+
+    regime = "fused" if n <= fused_mod.MAX_FUSED_N else "two_call"
+    return {
+        "n": n, "rows": m, "regime": regime,
+        "fwd_us": _time(fwd, x, a, d, iters=iters),
+        "bwd_us": _time(bwd, x, a, d, g, iters=iters),
+        "roofline_bytes_per_row": per_row_bytes(n),
+    }
+
+
+def bench_cascade(n: int, k: int, m: int, iters: int) -> dict:
+    r = jax.random.PRNGKey(100 + k)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+
+    fused = jax.jit(lambda x, a, d: ops.acdc_cascade_op(
+        x, a, d, relu=True, permute=True))
+    per_layer = jax.jit(lambda x, a, d: ops._cascade_per_layer(
+        x, a, d, None, True, True))
+
+    @jax.jit
+    def bwd(x, a, d):
+        return jax.grad(lambda a: jnp.sum(ops.acdc_cascade_op(
+            x, a, d, relu=True, permute=True)))(a)
+
+    rb = per_row_bytes(n, k)
+    return {
+        "n": n, "k": k, "rows": m,
+        "cascade_fused_fwd_us": _time(fused, x, a, d, iters=iters),
+        "cascade_per_layer_fwd_us": _time(per_layer, x, a, d, iters=iters),
+        "cascade_fused_bwd_us": _time(bwd, x, a, d, iters=iters),
+        "roofline_bytes_per_row": {
+            "fused": rb["fwd_cascade_fused"],
+            "per_layer": rb["fwd_per_layer_cascade"],
+        },
+    }
+
+
+def main(csv: bool = True, argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    iters = 2 if args.quick else 5
+    m = 128 if args.quick else 256
+
+    layer_sizes = (128, 256) if args.quick else (128, 256, 512)
+    cascade_ks = (1, 2, 4) if args.quick else (1, 2, 4, 8)
+
+    out = {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "layers": [bench_layer(n, m, iters) for n in layer_sizes],
+        "cascades": [bench_cascade(256, k, m, iters) for k in cascade_ks],
+        # The acceptance check: cascade fusion moves 8N bytes/row for
+        # EVERY K, while the per-layer path scales as 8KN.
+        "cascade_bytes_model": {
+            str(k): per_row_bytes(256, k) for k in cascade_ks
+        },
+    }
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    if csv:
+        for row in out["layers"]:
+            print(f"kernels_fwd_n{row['n']},{row['fwd_us']:.2f},"
+                  f"regime={row['regime']}")
+            print(f"kernels_bwd_n{row['n']},{row['bwd_us']:.2f},"
+                  f"roofline_bytes_row="
+                  f"{row['roofline_bytes_per_row']['bwd_fused']}")
+        for row in out["cascades"]:
+            print(f"kernels_cascade_fused_k{row['k']},"
+                  f"{row['cascade_fused_fwd_us']:.2f},"
+                  f"bytes_row={row['roofline_bytes_per_row']['fused']}")
+            print(f"kernels_cascade_per_layer_k{row['k']},"
+                  f"{row['cascade_per_layer_fwd_us']:.2f},"
+                  f"bytes_row={row['roofline_bytes_per_row']['per_layer']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced iteration counts (CI)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,table1,fig3,serve")
+                    help="comma list: fig2,table1,fig3,serve,kernels")
     args = ap.parse_args()
     which = set((args.only or "fig2,table1,fig3").split(","))
 
@@ -36,6 +36,10 @@ def main() -> None:
     if "serve" in which:
         from benchmarks import bench_serve
         bench_serve.main(csv=True, argv=[])
+        sys.stdout.flush()
+    if "kernels" in which:
+        from benchmarks import bench_kernels
+        bench_kernels.main(csv=True, argv=["--quick"] if args.quick else [])
         sys.stdout.flush()
 
 

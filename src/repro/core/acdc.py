@@ -36,10 +36,10 @@ from repro.core import transforms
 Method = Literal["auto", "fft", "matmul", "pallas"]
 
 # N at or below which the explicit-matrix (MXU) path is preferred on TPU.
-# Above it the FFT path wins on FLOPs; the Pallas kernel handles the fused
-# matmul path explicitly.  On CPU (tests) "auto" resolves to fft for large N.
-# Shared with kernels/ops.py (the backward pass picks its transform by the
-# same crossover) — keep the single definition here.
+# Above it the FFT path wins on FLOPs; the Pallas kernels are always
+# matrix-based and use their own VMEM gate (kernels.acdc_fused.MAX_FUSED_N)
+# instead of this crossover.  On CPU (tests) "auto" resolves to fft for
+# large N.
 MATMUL_MAX_N = 4096
 _MATMUL_MAX_N = MATMUL_MAX_N  # back-compat alias
 
@@ -70,16 +70,21 @@ def acdc(
     n = x.shape[-1]
     if a.shape[-1] != n or d.shape[-1] != n:
         raise ValueError(f"diagonal size mismatch: x={n} a={a.shape} d={d.shape}")
-    # keep the activation dtype: fp32 master diagonals are cast down so a
-    # bf16 residual stream stays bf16 through the cascade (scan carries).
-    a = a.astype(x.dtype)
-    d = d.astype(x.dtype)
-    bias = bias.astype(x.dtype) if bias is not None else None
     m = _resolve_method(n, method)
     if m == "pallas":
+        # fp32 master diagonals go to the kernel UNCAST: it upcasts every
+        # operand to fp32 in VMEM anyway, so a bf16 round trip on a/d/bias
+        # here would shed mantissa bits for free.  Only the activation
+        # dtype (x) decides the output dtype.
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.acdc_fused_op(x, a, d, bias)
+    # jnp fft/matmul paths carry the activation dtype: fp32 master
+    # diagonals are cast down so a bf16 residual stream stays bf16
+    # through the cascade (scan carries).
+    a = a.astype(x.dtype)
+    d = d.astype(x.dtype)
+    bias = bias.astype(x.dtype) if bias is not None else None
     h1 = x * a
     if m == "matmul":
         h2 = transforms.dct_via_matmul(h1)
@@ -142,6 +147,18 @@ def acdc_cascade(params: dict, x: jax.Array, cfg: ACDCConfig) -> jax.Array:
     program is O(1) in K.
     """
     n = cfg.n
+    if cfg.k > 1 and _resolve_method(n, cfg.method) == "pallas":
+        # Whole-cascade fusion: one Pallas kernel walks all K layers with
+        # the activation row-block resident in VMEM (8N bytes/row instead
+        # of 8KN), ReLU/riffle interleavings included; cascade-level
+        # custom VJP with recompute backward.  Falls back internally to
+        # the per-layer scan when the kernel's VMEM budget is exceeded
+        # (see kernels/acdc_cascade_fused.fits_vmem).
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.acdc_cascade_op(
+            x, params["a"], params["d"], params.get("bias"),
+            relu=cfg.relu, permute=cfg.permute)
     perm = jnp.asarray(transforms.make_riffle(n)) if cfg.permute else None
 
     if cfg.k == 1:

@@ -13,7 +13,13 @@ here behind one dispatch point, :func:`structured_linear`:
 * ``fastfood``       — Adaptive Fastfood (Yang et al. 2015),
                        ``Phi = D1 H P D2 H D3`` with learned diagonals.
 * ``acdc``           — the paper's layer (order-K cascade), see
-                       :mod:`repro.core.acdc`.
+                       :mod:`repro.core.acdc`.  With ``method='pallas'``
+                       the whole cascade (ReLU/riffle interleavings
+                       included) runs as one fused TPU kernel with a
+                       cascade-level custom VJP — 8N bytes of HBM traffic
+                       per row regardless of K (``kernels.ops
+                       .acdc_cascade_op``); the model zoo's projections
+                       inherit this through ``models.linear.linear_apply``.
 * ``afdf``           — the complex variant of section 3 (theory oracle).
 
 All follow the row-vector convention ``y = x @ Phi`` on the last axis.
@@ -47,6 +53,9 @@ class SellConfig:
     permute: bool = False
     bias: bool = True
     init_std: float = 0.061
+    # 'pallas' routes order-K cascades through the whole-cascade fused
+    # kernel (per-layer fallback above its VMEM budget); 'auto' picks
+    # matmul/fft by size.
     method: acdc_mod.Method = "auto"
     # low-rank
     rank: int = 0

@@ -2,8 +2,26 @@
 
 Layout (per repo convention):
 
-* ``acdc_fused.py``   — single-call fused kernel (pl.pallas_call + BlockSpec)
-* ``scaled_matmul.py``— blocked (m,n,k) scaled matmul kernel
-* ``ops.py``          — jit'd public wrappers + custom VJP (recompute bwd)
-* ``ref.py``          — pure-jnp oracles the tests assert against
+* ``acdc_fused.py``         — single-call fused forward (8N bytes/row);
+  also home of ``MAX_FUSED_N``, the VMEM gate shared by every fused path.
+* ``acdc_bwd.py``           — fused backward (paper eqs. 10-14) in one
+  kernel per row-block: recomputes ``h2`` in VMEM (section 5.3 trade),
+  emits the dx tile, accumulates da/dd/dbias in fp32 VMEM scratch across
+  the row grid.  Two-call degradation for N > ``MAX_FUSED_N``.
+* ``acdc_cascade_fused.py`` — order-K cascade forward in ONE kernel: the
+  activation row-block stays in VMEM across all K layers (8N bytes/row
+  independent of K, vs 8KN for the per-layer scan), with interleaved ReLU
+  fused on the VPU and the riffle permutation folded into the columns of
+  the mid-cascade C^T (no in-kernel gathers).  ``fits_vmem`` documents
+  and enforces the budget: (2-3) N^2 transform matrices + K stacked
+  diagonals + row tiles.
+* ``scaled_matmul.py``      — blocked (m,n,k) scaled matmul kernel; the
+  building block of every > ``MAX_FUSED_N`` regime.
+* ``ops.py``                — jit'd public wrappers + custom VJPs:
+  per-layer ``acdc_fused``/``acdc_fused_nobias`` (fused Pallas backward)
+  and cascade-level ``acdc_cascade_op`` (whole-cascade forward fusion,
+  recompute backward over per-layer fused kernels).
+* ``ref.py``                — pure-jnp oracles the tests assert against,
+  including the four-matmul backward formulation the fused kernel
+  replaced.
 """

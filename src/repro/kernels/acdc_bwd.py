@@ -1,0 +1,187 @@
+"""Fused ACDC backward Pallas kernel — eqs. (10)-(14) in one pass.
+
+The forward kernel (``acdc_fused.py``) moves 8N bytes of HBM traffic per
+row.  Before this kernel existed, the custom VJP lowered the backward to
+four separate XLA fp32 matmuls with ``gc``, ``h2`` and ``dh1`` each
+round-tripping HBM — 3 extra (M, N) fp32 tensors of traffic per layer.
+Here the whole backward runs per row-block with every intermediate in
+VMEM, matching the forward's memory behaviour:
+
+    HBM reads : x tile + g tile (+ C / C^T, amortized over the grid)
+    VMEM      : gc = g C,  h2 = (x*a) C   (RECOMPUTED — paper section 5.3
+                memory/runtime trade: h2 is never stored by the forward),
+                dh1 = (gc * d) C^T
+    HBM write : dx tile; da / dd / dbias once, at the last grid step
+
+The diagonal gradients are full-batch reductions (paper eqs. 10-12)::
+
+    dL/dbias = sum_rows gc
+    dL/dd    = sum_rows h2 * gc
+    dL/da    = sum_rows x * dh1
+    dL/dx    = a * dh1
+
+so they are accumulated across the row grid in fp32 VMEM scratch (TPU
+grids execute sequentially; same pattern as the k-loop accumulator in
+``scaled_matmul.py``) and written out on the final grid step.  Zero-padded
+rows of x and g contribute exact zeros to every partial sum, so padding M
+up to the block size is free.
+
+For N > ``MAX_FUSED_N`` (C and C^T no longer fit VMEM together with the
+row tiles) :func:`acdc_bwd_two_call` mirrors the forward's two-call
+regime: the three transform matmuls run as ``scaled_matmul`` Pallas
+kernels with the diagonal scalings fused into the k-loop, and only the
+unavoidable (M, N) intermediates ``gc``/``dh1`` round-trip HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import scaled_matmul as smm_mod
+
+# The backward keeps more live VMEM than the forward (x, g, dx tiles plus
+# gc/h2/dh1 intermediates next to the two N^2 transform matrices), so its
+# default row block is half the forward's.
+DEFAULT_BM = 128
+
+
+def _acdc_bwd_kernel(nm, with_bias, x_ref, g_ref, a_ref, d_ref,
+                     c_ref, ct_ref, *rest):
+    """One row-block of the fused backward; diagonal grads accumulate.
+
+    ``with_bias`` statically drops the dbias reduction, its scratch and
+    its output for the bias-free primitive (the LM path) — the same (M, N)
+    reduction ``acdc_fused_nobias`` exists to avoid in the forward.
+    """
+    if with_bias:
+        dx_ref, da_ref, dd_ref, db_ref, da_acc, dd_acc, db_acc = rest
+    else:
+        dx_ref, da_ref, dd_ref, da_acc, dd_acc = rest
+        db_ref = db_acc = None
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        da_acc[...] = jnp.zeros_like(da_acc)
+        dd_acc[...] = jnp.zeros_like(dd_acc)
+        if db_acc is not None:
+            db_acc[...] = jnp.zeros_like(db_acc)
+
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    ct = ct_ref[...].astype(jnp.float32)
+
+    gc = jnp.dot(g, c, preferred_element_type=jnp.float32)
+    h2 = jnp.dot(x * a, c, preferred_element_type=jnp.float32)  # recompute
+    dd_acc[...] += jnp.sum(h2 * gc, axis=0, keepdims=True)
+    if db_acc is not None:
+        db_acc[...] += jnp.sum(gc, axis=0, keepdims=True)
+    dh1 = jnp.dot(gc * d, ct, preferred_element_type=jnp.float32)
+    da_acc[...] += jnp.sum(x * dh1, axis=0, keepdims=True)
+    dx_ref[...] = (a * dh1).astype(dx_ref.dtype)
+
+    @pl.when(i == nm - 1)
+    def _finalize():
+        da_ref[...] = da_acc[...]
+        dd_ref[...] = dd_acc[...]
+        if db_ref is not None:
+            db_ref[...] = db_acc[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("with_bias", "bm", "interpret"))
+def acdc_bwd_pallas(
+    x: jax.Array,
+    g: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    c: jax.Array,
+    ct: jax.Array,
+    *,
+    with_bias: bool = True,
+    bm: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """Fused backward over 2-D ``x``/``g`` of shape (M, N).
+
+    Returns ``(dx, da, dd, dbias)`` with ``dx`` in ``x.dtype`` and the
+    diagonal gradients in fp32 (full-batch reductions stay in the
+    accumulator precision; callers cast to the parameter dtype).
+    ``with_bias=False`` skips the dbias reduction and returns ``None``
+    in its place.
+    """
+    m, n = x.shape
+    bm = min(bm, max(8, m))
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+        g = jnp.pad(g, ((0, pad_m), (0, 0)))
+    nm = x.shape[0] // bm
+    grid = (nm,)
+
+    a2 = a.reshape(1, n)
+    d2 = d.reshape(1, n)
+
+    diag_spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    mat_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    row_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+
+    n_diag_outs = 3 if with_bias else 2
+    diag_out = jax.ShapeDtypeStruct((1, n), jnp.float32)
+    outs = pl.pallas_call(
+        functools.partial(_acdc_bwd_kernel, nm, with_bias),
+        grid=grid,
+        in_specs=[row_spec, row_spec, diag_spec, diag_spec,
+                  mat_spec, mat_spec],
+        out_specs=[row_spec] + [diag_spec] * n_diag_outs,
+        out_shape=[jax.ShapeDtypeStruct((x.shape[0], n), x.dtype)]
+        + [diag_out] * n_diag_outs,
+        scratch_shapes=[pltpu.VMEM((1, n), jnp.float32)] * n_diag_outs,
+        interpret=interpret,
+    )(x, g, a2, d2, c, ct)
+    dx, da, dd = outs[0], outs[1], outs[2]
+    db = outs[3].reshape(n) if with_bias else None
+    if pad_m:
+        dx = dx[:m]
+    return dx, da.reshape(n), dd.reshape(n), db
+
+
+def acdc_bwd_two_call(
+    x: jax.Array,
+    g: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    c: jax.Array,
+    ct: jax.Array,
+    *,
+    with_bias: bool = True,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """Backward for the N > MAX_FUSED_N regime via chained scaled matmuls.
+
+    ``gc`` and ``dh1`` land in HBM exactly once each (unavoidable at sizes
+    where the transform matrix no longer fits VMEM); the diagonal scalings
+    ride the matmul k-loops for free and the remaining reductions are
+    single-pass element-wise XLA ops.
+    """
+    xf = x.astype(jnp.float32)
+    gc = smm_mod.scaled_matmul_pallas(g.astype(jnp.float32), c,
+                                      interpret=interpret)
+    h2 = smm_mod.scaled_matmul_pallas(xf, c, pre=a.astype(jnp.float32),
+                                      interpret=interpret)
+    dd = jnp.sum(h2 * gc, axis=0)
+    db = jnp.sum(gc, axis=0) if with_bias else None
+    dh1 = smm_mod.scaled_matmul_pallas(gc, ct, pre=d.astype(jnp.float32),
+                                       interpret=interpret)
+    da = jnp.sum(xf * dh1, axis=0)
+    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype)
+    return dx, da, dd, db

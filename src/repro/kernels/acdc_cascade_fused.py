@@ -1,0 +1,182 @@
+"""Whole-cascade fused ACDC forward — 8N bytes/row independent of K.
+
+``acdc_cascade`` used to scan over K per-layer kernel calls, so an
+order-K SELL paid K full HBM round trips for the activation (8KN bytes
+per row).  This kernel loops over the stacked (K, N) diagonals INSIDE the
+kernel, keeping the activation row-block in VMEM between layers: the row
+is read from HBM once, transformed K times on-chip, and written once —
+the paper's section 5 "minimum bytes moved" argument extended from one
+layer to the whole cascade.
+
+Interleavings (the CaffeNet configuration of section 6.2) are fused too:
+
+* ReLU between layers is a VPU ``maximum`` on the resident block;
+* the riffle permutation is FOLDED INTO THE INVERSE TRANSFORM — for a
+  permutation ``p``, ``(z @ C^T)[:, p] == z @ C^T[:, p]``, so mid-cascade
+  layers multiply by a column-permuted ``C^T`` and no in-kernel gather is
+  ever issued (gathers along the lane axis are VPU-hostile on TPU).
+
+VMEM budget (the gate for using this kernel, see :func:`fits_vmem`)::
+
+    transform matrices : C, C^T fp32 (+ permuted C^T when riffling)
+                         -> (2 or 3) * 4 N^2 bytes
+    stacked diagonals  : a, d (+ bias) -> (2 or 3) * 4 K N bytes
+    activation tiles   : x block, y block + two live fp32 intermediates
+                         -> ~4 * 4 bm N bytes
+
+The matrices dominate: ~8 MB at N = 1024 (== MAX_FUSED_N), ~12 MB when
+riffling adds the third.  The row block shrinks to compensate —
+:func:`pick_bm` chooses the largest ``bm`` that keeps the total inside
+the budget (riffled N = 1024 fuses at bm = 64; unriffled keeps 256) and
+``ops.py`` falls back to the per-layer scan only when no block size
+fits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.acdc_fused import MAX_FUSED_N
+
+DEFAULT_BM = 256
+
+# Conservative per-core VMEM budget for fits_vmem (bytes).  Real cores
+# have ~16 MB; leave headroom for double-buffered pipelining.
+VMEM_BUDGET = 14 * 1024 * 1024
+
+
+def cascade_vmem_bytes(n: int, k: int, *, permute: bool, bias: bool,
+                       bm: int = DEFAULT_BM) -> int:
+    """Estimated live VMEM of the fused cascade kernel (see module doc)."""
+    mats = 3 if permute else 2
+    diags = 3 if bias else 2
+    tiles = 4  # x block, y block, two fp32 intermediates
+    return 4 * (mats * n * n + diags * k * n + tiles * bm * n)
+
+
+def pick_bm(n: int, k: int, *, permute: bool, bias: bool) -> Optional[int]:
+    """Largest row block that keeps the fused cascade inside the VMEM
+    budget, or ``None`` if even the smallest tile doesn't fit."""
+    if n > MAX_FUSED_N:
+        return None
+    for bm in (DEFAULT_BM, 128, 64, 32):
+        if cascade_vmem_bytes(n, k, permute=permute, bias=bias,
+                              bm=bm) <= VMEM_BUDGET:
+            return bm
+    return None
+
+
+def fits_vmem(n: int, k: int, *, permute: bool, bias: bool) -> bool:
+    """Whether the order-K fused cascade fits the VMEM budget at size N
+    (at any supported row-block size)."""
+    return pick_bm(n, k, permute=permute, bias=bias) is not None
+
+
+def _cascade_kernel(k, relu, x_ref, a_ref, d_ref, bias_ref,
+                    c_ref, ct_ref, ct_mid_ref, o_ref):
+    """One row-block through all K layers without leaving VMEM."""
+    h = x_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    ct_last = ct_ref[...].astype(jnp.float32)
+    ct_mid = (ct_mid_ref[...].astype(jnp.float32)
+              if ct_mid_ref is not None else ct_last)
+    for i in range(k):  # K is static: unrolled, no dynamic layer indexing
+        h1 = h * a_ref[i:i + 1, :].astype(jnp.float32)
+        h2 = jnp.dot(h1, c, preferred_element_type=jnp.float32)
+        h3 = h2 * d_ref[i:i + 1, :].astype(jnp.float32)
+        if bias_ref is not None:
+            h3 = h3 + bias_ref[i:i + 1, :].astype(jnp.float32)
+        last = i == k - 1
+        h = jnp.dot(h3, ct_last if last else ct_mid,
+                    preferred_element_type=jnp.float32)
+        if relu and not last:
+            h = jnp.maximum(h, 0.0)
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("relu", "bm", "interpret"))
+def acdc_cascade_pallas(
+    x: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    bias: Optional[jax.Array],
+    c: jax.Array,
+    ct: jax.Array,
+    ct_mid: Optional[jax.Array],
+    *,
+    relu: bool = False,
+    bm: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused order-K cascade over 2-D ``x`` (M, N).
+
+    ``a``/``d``/``bias`` are the stacked (K, N) per-layer diagonals.
+    ``ct_mid`` is the column-permuted inverse transform applied between
+    layers (pass ``None`` when not riffling); ``ct`` closes the cascade.
+    """
+    m, n = x.shape
+    k = a.shape[0]
+    bm = min(bm, max(8, m))
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    grid = (x.shape[0] // bm,)
+
+    stack_spec = pl.BlockSpec((k, n), lambda i: (0, 0))
+    mat_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    row_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+
+    operands = [x, a, d]
+    in_specs = [row_spec, stack_spec, stack_spec]
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(stack_spec)
+    operands += [c, ct]
+    in_specs += [mat_spec, mat_spec]
+    if ct_mid is not None:
+        operands.append(ct_mid)
+        in_specs.append(mat_spec)
+    variants = {  # (has_bias, has_ct_mid) -> positional-ref wrapper
+        (True, True): _cascade_kernel,
+        (True, False): _cascade_kernel_nomid,
+        (False, True): _cascade_kernel_nobias,
+        (False, False): _cascade_kernel_nobias_nomid,
+    }
+    kernel = functools.partial(
+        variants[(bias is not None, ct_mid is not None)], k, relu)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], n), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    if pad_m:
+        out = out[:m]
+    return out
+
+
+def _cascade_kernel_nobias(k, relu, x_ref, a_ref, d_ref,
+                           c_ref, ct_ref, ct_mid_ref, o_ref):
+    _cascade_kernel(k, relu, x_ref, a_ref, d_ref, None,
+                    c_ref, ct_ref, ct_mid_ref, o_ref)
+
+
+def _cascade_kernel_nomid(k, relu, x_ref, a_ref, d_ref, bias_ref,
+                          c_ref, ct_ref, o_ref):
+    _cascade_kernel(k, relu, x_ref, a_ref, d_ref, bias_ref,
+                    c_ref, ct_ref, None, o_ref)
+
+
+def _cascade_kernel_nobias_nomid(k, relu, x_ref, a_ref, d_ref,
+                                 c_ref, ct_ref, o_ref):
+    _cascade_kernel(k, relu, x_ref, a_ref, d_ref, None,
+                    c_ref, ct_ref, None, o_ref)

@@ -33,6 +33,13 @@ from jax.experimental import pallas as pl
 
 # fp32 C + C^T at N=2048 -> 2 * 16MB exceeds VMEM (~16MB/core on v5e).
 # N=1024 -> 2 * 4MB + tiles: fits comfortably.
+#
+# The whole-cascade fused kernel (acdc_cascade_fused.py) shares this gate
+# and adds to the same budget: K stacked (K, N) diagonals (a, d, bias ->
+# up to 12 KB * K at N=1024, negligible) and, when riffling, a THIRD N^2
+# matrix (the column-permuted C^T for mid-cascade layers) -> ~12 MB of
+# matrices at N=1024.  ``acdc_cascade_fused.fits_vmem`` does the exact
+# arithmetic and ops.py falls back to the per-layer scan when it fails.
 MAX_FUSED_N = 1024
 DEFAULT_BM = 256
 

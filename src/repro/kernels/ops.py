@@ -8,7 +8,20 @@
                            diagonals fused (paper's "multiple call");
 * custom VJP that RECOMPUTES the transform-domain intermediate ``h2`` in
   the backward pass instead of storing it — the paper's section 5.3
-  memory/runtime trade, expressed as a custom_vjp.
+  memory/runtime trade, expressed as a custom_vjp.  The backward itself
+  is the fused Pallas kernel in ``acdc_bwd.py`` (one pass per row-block,
+  diagonal grads accumulated in VMEM scratch); above ``MAX_FUSED_N`` it
+  degrades to chained ``scaled_matmul`` kernels, never to bare XLA
+  matmuls.
+
+``acdc_cascade_op`` is the order-K entry point: the whole cascade —
+including the interleaved ReLU and riffle permutation of the CaffeNet
+configuration — runs as ONE Pallas kernel (``acdc_cascade_fused.py``)
+moving 8N bytes per row instead of 8KN, behind a cascade-level custom
+VJP whose backward recomputes the per-layer inputs and then applies the
+fused per-layer backward kernel in reverse.  When the cascade exceeds
+the fused-kernel VMEM budget it falls back to the per-layer scan (each
+layer still fused forward + backward).
 
 The backward formulas are the paper's eqs. (10)-(14):
 
@@ -27,7 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import transforms
-from repro.core.acdc import MATMUL_MAX_N
+from repro.kernels import acdc_bwd as bwd_mod
+from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import scaled_matmul as smm_mod
 
@@ -56,6 +70,22 @@ def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
                                         interpret=interpret)
 
 
+def _acdc_bwd_impl(x2, a, d, g2, *, with_bias=True, interpret):
+    """Pallas backward dispatch; returns (dx2, da, dd, dbias), diagonal
+    grads in fp32 (the VMEM accumulator precision).  ``with_bias=False``
+    skips the dbias reduction entirely (dbias comes back ``None``)."""
+    n = x2.shape[-1]
+    c = transforms.dct_matrix(n, dtype=jnp.float32)
+    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    if n <= fused_mod.MAX_FUSED_N:
+        return bwd_mod.acdc_bwd_pallas(x2, g2, a, d, c, ct,
+                                       with_bias=with_bias,
+                                       interpret=interpret)
+    return bwd_mod.acdc_bwd_two_call(x2, g2, a, d, c, ct,
+                                     with_bias=with_bias,
+                                     interpret=interpret)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=())
 def acdc_fused(x, a, d, bias):
     """Fused ACDC: ``y = ((x*a) C * d + bias) C^T`` along the last axis."""
@@ -64,36 +94,18 @@ def acdc_fused(x, a, d, bias):
     return y.reshape(shape)
 
 
-def _acdc_bwd_core(x, a, d, g):
-    """Shared backward math (paper eqs. 10-14); returns (dx, da, dd, gc).
-
-    ``gc = g C`` is reused for the bias gradient when a bias exists.
-    """
-    n = x.shape[-1]
-    x2, shape = _flatten(x)
-    g2, _ = _flatten(g)
-    dct = transforms.dct_via_matmul if n <= MATMUL_MAX_N else transforms.dct
-    idct = (transforms.idct_via_matmul if n <= MATMUL_MAX_N
-            else transforms.idct)
-    gc = dct(g2.astype(jnp.float32))
-    h2 = dct(x2.astype(jnp.float32) * a.astype(jnp.float32))  # recompute (paper 5.3)
-    dd = jnp.sum(h2 * gc, axis=0).astype(d.dtype)
-    dh1 = idct(gc * d.astype(jnp.float32))
-    da = jnp.sum(x2.astype(jnp.float32) * dh1, axis=0).astype(a.dtype)
-    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype).reshape(shape)
-    return dx, da, dd, gc
-
-
 def _acdc_vjp_fwd(x, a, d, bias):
     y = acdc_fused(x, a, d, bias)
-    return y, (x, a, d)
+    return y, (x, a, d, bias)
 
 
 def _acdc_vjp_bwd(res, g):
-    x, a, d = res
-    dx, da, dd, gc = _acdc_bwd_core(x, a, d, g)
-    dbias = jnp.sum(gc, axis=0).astype(d.dtype)
-    return dx, da, dd, dbias
+    x, a, d, bias = res
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    dx2, da, dd, db = _acdc_bwd_impl(x2, a, d, g2, interpret=_INTERPRET)
+    return (dx2.reshape(shape), da.astype(a.dtype), dd.astype(d.dtype),
+            db.astype(bias.dtype))
 
 
 acdc_fused.defvjp(_acdc_vjp_fwd, _acdc_vjp_bwd)
@@ -119,8 +131,11 @@ def _acdc_nobias_vjp_fwd(x, a, d):
 
 def _acdc_nobias_vjp_bwd(res, g):
     x, a, d = res
-    dx, da, dd, _ = _acdc_bwd_core(x, a, d, g)
-    return dx, da, dd
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    dx2, da, dd, _ = _acdc_bwd_impl(x2, a, d, g2, with_bias=False,
+                                    interpret=_INTERPRET)
+    return dx2.reshape(shape), da.astype(a.dtype), dd.astype(d.dtype)
 
 
 acdc_fused_nobias.defvjp(_acdc_nobias_vjp_fwd, _acdc_nobias_vjp_bwd)
@@ -136,6 +151,191 @@ def acdc_fused_op(
     if bias is None:
         return acdc_fused_nobias(x, a, d)
     return acdc_fused(x, a, d, bias)
+
+
+# ---------------------------------------------------------------------------
+# Order-K cascade: whole-cascade fusion + cascade-level custom VJP.
+# ---------------------------------------------------------------------------
+
+def _cascade_fwd_impl(x2, a, d, bias, relu, permute, *, interpret):
+    n = x2.shape[-1]
+    c = transforms.dct_matrix(n, dtype=jnp.float32)
+    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    ct_mid = None
+    if permute:
+        # Fold the riffle into the mid-cascade inverse transform:
+        # (z @ C^T)[:, p] == z @ C^T[:, p] — no in-kernel gather.
+        perm = transforms.make_riffle(n)
+        ct_mid = ct[:, perm]
+    # Row block sized to the VMEM left over by the transform matrices;
+    # the dispatcher guaranteed some block fits before routing here.
+    bm = cascade_mod.pick_bm(n, a.shape[0], permute=permute,
+                             bias=bias is not None)
+    return cascade_mod.acdc_cascade_pallas(x2, a, d, bias, c, ct, ct_mid,
+                                           relu=relu, bm=bm,
+                                           interpret=interpret)
+
+
+def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
+    """Cascade backward: recompute per-layer inputs (section 5.3 trade at
+    cascade scope — the fused forward stores NOTHING but x), then run the
+    fused per-layer backward kernel in reverse under ``lax.scan``."""
+    n = x.shape[-1]
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    interp = _INTERPRET
+    perm = inv_perm = None
+    if permute:
+        p = transforms.make_riffle(n)
+        perm = jnp.asarray(p)
+        inv_perm = jnp.asarray(transforms.invert_permutation(p))
+
+    with_bias = bias is not None
+    layers = {"a": a, "d": d}
+    if with_bias:
+        layers["bias"] = bias
+
+    def fstep(h, layer):
+        z = _acdc_fwd_impl(h, layer["a"], layer["d"], layer.get("bias"),
+                           interpret=interp)
+        hn = jnp.maximum(z, 0) if relu else z
+        if perm is not None:
+            hn = hn[:, perm]
+        # the z residual exists only to rebuild the ReLU mask — don't
+        # stack a (K-1, M, N) tensor in HBM for linear cascades.
+        return hn, (h, z) if relu else h
+
+    # Recompute only the K-1 interleaved layers: hs[i] is the input to
+    # layer i, zs[i] its pre-interleave output, and the final carry is
+    # the last layer's input (its own forward output is never needed).
+    head = jax.tree.map(lambda p: p[:-1], layers)
+    if relu:
+        h_last, (hs, zs) = jax.lax.scan(fstep, x2, head)
+    else:
+        h_last, hs = jax.lax.scan(fstep, x2, head)
+
+    # Last layer: the upstream cotangent applies directly (no interleave
+    # after the final layer).
+    dh, da_k, dd_k, db_k = _acdc_bwd_impl(h_last, a[-1], d[-1], g2,
+                                          with_bias=with_bias,
+                                          interpret=interp)
+
+    def bstep(gcur, inp):
+        if relu:
+            h_i, z_i, layer = inp
+        else:
+            h_i, layer = inp
+        gz = gcur[:, inv_perm] if inv_perm is not None else gcur
+        if relu:
+            gz = jnp.where(z_i > 0, gz, jnp.zeros_like(gz))
+        dx, da_i, dd_i, db_i = _acdc_bwd_impl(h_i, layer["a"], layer["d"],
+                                              gz, with_bias=with_bias,
+                                              interpret=interp)
+        return dx, (da_i, dd_i, db_i)
+
+    xs = (hs, zs, head) if relu else (hs, head)
+    dh, (das, dds, dbs) = jax.lax.scan(bstep, dh, xs, reverse=True)
+
+    da = jnp.concatenate([das, da_k[None]], axis=0).astype(a.dtype)
+    dd = jnp.concatenate([dds, dd_k[None]], axis=0).astype(d.dtype)
+    dx = dh.reshape(shape)
+    if bias is None:
+        return dx, da, dd
+    db = jnp.concatenate([dbs, db_k[None]], axis=0).astype(bias.dtype)
+    return dx, da, dd, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _cascade_bias(relu, permute, x, a, d, bias):
+    x2, shape = _flatten(x)
+    y = _cascade_fwd_impl(x2, a, d, bias, relu, permute,
+                          interpret=_INTERPRET)
+    return y.reshape(shape)
+
+
+def _cascade_bias_fwd(relu, permute, x, a, d, bias):
+    return _cascade_bias(relu, permute, x, a, d, bias), (x, a, d, bias)
+
+
+def _cascade_bias_bwd(relu, permute, res, g):
+    x, a, d, bias = res
+    return _cascade_bwd_core(relu, permute, x, a, d, bias, g)
+
+
+_cascade_bias.defvjp(_cascade_bias_fwd, _cascade_bias_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _cascade_nobias(relu, permute, x, a, d):
+    x2, shape = _flatten(x)
+    y = _cascade_fwd_impl(x2, a, d, None, relu, permute,
+                          interpret=_INTERPRET)
+    return y.reshape(shape)
+
+
+def _cascade_nobias_fwd(relu, permute, x, a, d):
+    return _cascade_nobias(relu, permute, x, a, d), (x, a, d)
+
+
+def _cascade_nobias_bwd(relu, permute, res, g):
+    x, a, d = res
+    return _cascade_bwd_core(relu, permute, x, a, d, None, g)
+
+
+_cascade_nobias.defvjp(_cascade_nobias_fwd, _cascade_nobias_bwd)
+
+
+def _cascade_per_layer(x, a, d, bias, relu, permute):
+    """Fallback when the whole cascade exceeds the fused VMEM budget:
+    ``lax.scan`` over per-layer fused ops (8KN bytes/row, each layer still
+    a fused forward + fused backward)."""
+    n = x.shape[-1]
+    perm = jnp.asarray(transforms.make_riffle(n)) if permute else None
+    layers = {"a": a, "d": d}
+    if bias is not None:
+        layers["bias"] = bias
+
+    def body(h, layer):
+        y = acdc_fused_op(h, layer["a"], layer["d"], layer.get("bias"))
+        if relu:
+            y = jax.nn.relu(y)
+        if perm is not None:
+            y = y[..., perm]
+        return y, None
+
+    head = jax.tree.map(lambda p: p[:-1], layers)
+    last = jax.tree.map(lambda p: p[-1], layers)
+    h, _ = jax.lax.scan(body, x, head)
+    return acdc_fused_op(h, last["a"], last["d"], last.get("bias"))
+
+
+def acdc_cascade_op(
+    x: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    relu: bool = False,
+    permute: bool = False,
+) -> jax.Array:
+    """Order-K fused cascade: stacked (K, N) diagonals, one kernel.
+
+    Dispatch: K == 1 degenerates to the single-layer op; cascades that fit
+    the fused kernel's VMEM budget run whole-cascade fused (8N bytes/row,
+    independent of K) behind the cascade-level custom VJP; anything larger
+    falls back to the per-layer scan.
+    """
+    k = a.shape[0]
+    if k == 1:
+        return acdc_fused_op(x, a[0], d[0],
+                             None if bias is None else bias[0])
+    n = x.shape[-1]
+    if not cascade_mod.fits_vmem(n, k, permute=permute,
+                                 bias=bias is not None):
+        return _cascade_per_layer(x, a, d, bias, relu, permute)
+    if bias is None:
+        return _cascade_nobias(relu, permute, x, a, d)
+    return _cascade_bias(relu, permute, x, a, d, bias)
 
 
 def scaled_matmul(

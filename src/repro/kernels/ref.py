@@ -35,6 +35,33 @@ def acdc_fused_ref(
     return y.astype(x.dtype)
 
 
+def acdc_bwd_ref(
+    x: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    g: jax.Array,
+):
+    """Oracle for the fused backward (paper eqs. 10-14), pure jnp fp32.
+
+    Returns ``(dx, da, dd, dbias)`` — the same contract as
+    ``kernels.acdc_bwd``: ``dx`` in ``x.dtype``, diagonal grads fp32.
+    This is the four-matmul formulation the Pallas kernel replaced; it
+    stays here purely as the test oracle.
+    """
+    n = x.shape[-1]
+    c = transforms.dct_matrix(n, dtype=jnp.float32)
+    x2 = x.reshape(-1, n).astype(jnp.float32)
+    g2 = g.reshape(-1, n).astype(jnp.float32)
+    gc = g2 @ c
+    h2 = (x2 * a.astype(jnp.float32)) @ c
+    dd = jnp.sum(h2 * gc, axis=0)
+    dbias = jnp.sum(gc, axis=0)
+    dh1 = (gc * d.astype(jnp.float32)) @ c.T
+    da = jnp.sum(x2 * dh1, axis=0)
+    dx = (a.astype(jnp.float32) * dh1).astype(x.dtype).reshape(x.shape)
+    return dx, da, dd, dbias
+
+
 def scaled_matmul_ref(
     x: jax.Array,
     w: jax.Array,

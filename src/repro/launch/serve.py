@@ -107,6 +107,9 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3_1_7b", choices=registry.ARCHS)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sell", default="dense")
+    ap.add_argument("--sell-method", default="auto",
+                    choices=["auto", "fft", "matmul", "pallas"],
+                    help="transform backend for SELL projections")
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
@@ -122,7 +125,8 @@ def main(argv=None):
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
     if args.sell != "dense":
-        cfg = dataclasses.replace(cfg, sell_kind=args.sell)
+        cfg = dataclasses.replace(cfg, sell_kind=args.sell,
+                                  sell_method=args.sell_method)
     model = get_model(cfg)
     rng = jax.random.PRNGKey(0)
     params = model.init(rng, cfg)

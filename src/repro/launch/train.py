@@ -44,10 +44,12 @@ SELL_GROUPS = (
 
 def build(arch: str, smoke: bool, sell: str, seq_len: int,
           global_batch: int, lr: float, total_steps: int,
-          accum_steps: int = 1, mesh=None, compress_grads: bool = False):
+          accum_steps: int = 1, mesh=None, compress_grads: bool = False,
+          sell_method: str = "auto"):
     cfg = registry.get_smoke_config(arch) if smoke else registry.get_config(arch)
     if sell != "dense":
-        cfg = dataclasses.replace(cfg, sell_kind=sell)
+        cfg = dataclasses.replace(cfg, sell_kind=sell,
+                                  sell_method=sell_method)
     model = get_model(cfg)
     opt = make_optimizer(
         OptimizerConfig(kind="adamw", lr=lr, groups=SELL_GROUPS),
@@ -132,6 +134,11 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--sell", default="dense")
+    ap.add_argument("--sell-method", default="auto",
+                    choices=["auto", "fft", "matmul", "pallas"],
+                    help="transform backend for SELL projections; "
+                         "'pallas' runs the fused whole-cascade kernel "
+                         "(interpret mode off-TPU)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -163,7 +170,7 @@ def main(argv=None):
     cfg, model, opt, mesh, jitted, pipeline, state_sh = build(
         args.arch, args.smoke, args.sell, args.seq_len, args.global_batch,
         args.lr, args.steps, args.accum_steps, mesh=mesh,
-        compress_grads=args.compress_grads)
+        compress_grads=args.compress_grads, sell_method=args.sell_method)
     compress_dp = dict(mesh.shape)["data"] if args.compress_grads else 0
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)

@@ -1,0 +1,273 @@
+"""Gradient parity of the fused Pallas backward + cascade fusion vs jnp
+oracles (interpret mode on CPU, compiled on TPU).
+
+Coverage matrix from the fused-training-hot-path issue:
+
+* fused backward vs ``jax.grad`` of the jnp reference across BOTH N
+  regimes (<= and > ``MAX_FUSED_N``), with/without bias, fp32 and bf16;
+* direct VJP outputs vs the four-matmul reference formulation;
+* cascade-fused forward vs the ``acdc_cascade`` oracle with ReLU/riffle
+  on and off, plus cascade-level gradient parity;
+* the model zoo's ``linear_apply`` projections and the ``dist/steps.py``
+  train step pick the pallas path up unchanged.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import acdc as A
+from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import ops, ref
+
+SMALL_N = 256                       # single fused kernel regime
+BIG_N = fused_mod.MAX_FUSED_N * 2   # two-call scaled_matmul regime
+
+
+def _layer(n, dtype=jnp.float32, seed=0):
+    r = jax.random.PRNGKey(seed)
+    m = 4 if n > fused_mod.MAX_FUSED_N else 16
+    x = jax.random.normal(r, (m, n), dtype)
+    # diagonals stay fp32 masters — the kernels take them uncast
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    b = 0.1 * jax.random.normal(jax.random.fold_in(r, 3), (n,))
+    return x, a, d, b
+
+
+def _grad_tol(dtype, n):
+    return 1e-4 * np.sqrt(n / 128) if dtype == jnp.float32 else 5e-2
+
+
+@pytest.mark.parametrize("n", [SMALL_N, BIG_N])
+@pytest.mark.parametrize("bias", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_backward_matches_autodiff_of_oracle(n, bias, dtype):
+    x, a, d, b = _layer(n, dtype)
+    args = (x, a, d, b) if bias else (x, a, d)
+    argnums = tuple(range(len(args)))
+
+    def lk(*args):
+        return jnp.sum(jnp.tanh(ops.acdc_fused_op(*args).astype(jnp.float32)))
+
+    def lr(*args):
+        return jnp.sum(jnp.tanh(ref.acdc_fused_ref(*args).astype(jnp.float32)))
+
+    gk = jax.grad(lk, argnums=argnums)(*args)
+    gr = jax.grad(lr, argnums=argnums)(*args)
+    for name, got, want in zip("xadb", gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=_grad_tol(dtype, n), rtol=2e-2 if dtype == jnp.bfloat16
+            else 1e-3, err_msg=f"{name} n={n}")
+
+
+@pytest.mark.parametrize("n", [128, SMALL_N])
+def test_vjp_outputs_match_four_matmul_reference(n):
+    """The fused kernel's raw VJP cotangents equal the eq. 10-14 reference
+    (the four-matmul formulation it replaced), not just chained grads."""
+    x, a, d, b = _layer(n, seed=n)
+    g = jax.random.normal(jax.random.PRNGKey(99), x.shape)
+    _, vjp = jax.vjp(ops.acdc_fused, x, a, d, b)
+    dx, da, dd, db = vjp(g)
+    rx, ra, rd, rb = ref.acdc_bwd_ref(x, a, d, g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(ra), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(rd), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(rb), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_mixed_dtype_bias_cotangent():
+    """bf16 diagonals with an fp32 bias (reachable now that the pallas
+    path takes master params uncast): each cotangent must match its own
+    primal's dtype, not d's."""
+    n = 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, n), jnp.bfloat16)
+    a = jnp.ones((n,), jnp.bfloat16)
+    d = jnp.ones((n,), jnp.bfloat16)
+    b = jnp.zeros((n,), jnp.float32)
+    g = jax.grad(lambda x, a, d, b: jnp.sum(
+        ops.acdc_fused_op(x, a, d, b).astype(jnp.float32)),
+        argnums=(0, 1, 2, 3))(x, a, d, b)
+    assert g[0].dtype == jnp.bfloat16
+    assert g[1].dtype == jnp.bfloat16
+    assert g[3].dtype == jnp.float32
+
+
+def test_fused_backward_ragged_rows_ignore_padding():
+    """Row counts that don't divide the block size: zero-padded rows must
+    contribute nothing to the diagonal reductions."""
+    n = 128
+    r = jax.random.PRNGKey(3)
+    x = jax.random.normal(r, (13, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (n,))
+    g = jax.random.normal(jax.random.fold_in(r, 4), (13, n))
+    _, vjp = jax.vjp(ops.acdc_fused_nobias, x, a, d)
+    dx, da, dd = vjp(g)
+    rx, ra, rd, _ = ref.acdc_bwd_ref(x, a, d, g)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(ra), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dd), np.asarray(rd), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx), atol=1e-4)
+
+
+def test_nd_batch_gradients():
+    """ND inputs flatten through the VJP and come back in shape."""
+    n = 128
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, n))
+    a = jnp.ones((n,))
+    d = 1.5 * jnp.ones((n,))
+
+    gk = jax.grad(lambda x: jnp.sum(ops.acdc_fused_op(x, a, d) ** 2))(x)
+    gr = jax.grad(lambda x: jnp.sum(ref.acdc_fused_ref(x, a, d) ** 2))(x)
+    assert gk.shape == x.shape
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Whole-cascade fusion.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("permute", [False, True])
+@pytest.mark.parametrize("bias", [False, True])
+def test_cascade_fused_forward_vs_oracle(relu, permute, bias):
+    n, k = 128, 3
+    kw = dict(n=n, k=k, relu=relu, permute=permute, bias=bias)
+    cfg_p = A.ACDCConfig(method="pallas", **kw)
+    cfg_o = A.ACDCConfig(method="matmul", **kw)
+    p = A.init_acdc_params(jax.random.PRNGKey(11), cfg_p)
+    if bias:
+        p["bias"] = p["bias"] + 0.05  # nonzero so the bias path is live
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, n))
+    got = A.acdc_cascade(p, x, cfg_p)
+    want = A.acdc_cascade(p, x, cfg_o)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("relu,permute,bias", [
+    (False, False, False), (True, True, True), (True, False, False),
+])
+def test_cascade_fused_gradients_vs_oracle(relu, permute, bias):
+    n, k = 128, 3
+    kw = dict(n=n, k=k, relu=relu, permute=permute, bias=bias)
+    cfg_p = A.ACDCConfig(method="pallas", **kw)
+    cfg_o = A.ACDCConfig(method="matmul", **kw)
+    p = A.init_acdc_params(jax.random.PRNGKey(13), cfg_p)
+    if bias:
+        p["bias"] = p["bias"] + 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, n))
+
+    def loss(cfg):
+        return lambda p, x: jnp.sum(jnp.tanh(A.acdc_cascade(p, x, cfg)))
+
+    gp, gxp = jax.grad(loss(cfg_p), argnums=(0, 1))(p, x)
+    go, gxo = jax.grad(loss(cfg_o), argnums=(0, 1))(p, x)
+    np.testing.assert_allclose(np.asarray(gxp), np.asarray(gxo), atol=2e-4,
+                               rtol=1e-3)
+    for key in gp:
+        np.testing.assert_allclose(
+            np.asarray(gp[key]), np.asarray(go[key]), atol=2e-4, rtol=1e-3,
+            err_msg=key)
+
+
+def test_cascade_fused_bf16_activation_fp32_masters():
+    """bf16 residual stream with fp32 master diagonals: output dtype
+    follows the activation, gradients follow the parameters."""
+    n, k = 128, 2
+    cfg = A.ACDCConfig(n=n, k=k, relu=True, bias=False, method="pallas")
+    p = A.init_acdc_params(jax.random.PRNGKey(5), cfg)  # fp32 masters
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, n), jnp.bfloat16)
+    y = A.acdc_cascade(p, x, cfg)
+    assert y.dtype == jnp.bfloat16
+    g = jax.grad(lambda p: jnp.sum(
+        A.acdc_cascade(p, x, cfg).astype(jnp.float32)))(p)
+    assert g["a"].dtype == jnp.float32
+    cfg_o = A.ACDCConfig(n=n, k=k, relu=True, bias=False, method="matmul")
+    g_o = jax.grad(lambda p: jnp.sum(
+        A.acdc_cascade(p, x, cfg_o).astype(jnp.float32)))(p)
+    np.testing.assert_allclose(np.asarray(g["a"]), np.asarray(g_o["a"]),
+                               atol=0.3, rtol=0.1)
+
+
+def test_cascade_fallback_beyond_vmem_budget():
+    """N above MAX_FUSED_N: the cascade op must fall back to the
+    per-layer path and still match the oracle (fwd + grads)."""
+    n, k = fused_mod.MAX_FUSED_N * 2, 2
+    cfg_p = A.ACDCConfig(n=n, k=k, relu=True, bias=False, method="pallas")
+    cfg_o = A.ACDCConfig(n=n, k=k, relu=True, bias=False, method="fft")
+    p = A.init_acdc_params(jax.random.PRNGKey(7), cfg_p)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, n))
+    np.testing.assert_allclose(
+        np.asarray(A.acdc_cascade(p, x, cfg_p)),
+        np.asarray(A.acdc_cascade(p, x, cfg_o)), atol=2e-3, rtol=1e-3)
+    gp = jax.grad(lambda p: jnp.sum(jnp.tanh(A.acdc_cascade(p, x, cfg_p))))(p)
+    go = jax.grad(lambda p: jnp.sum(jnp.tanh(A.acdc_cascade(p, x, cfg_o))))(p)
+    np.testing.assert_allclose(np.asarray(gp["d"]), np.asarray(go["d"]),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_cascade_k1_degenerates_to_single_layer():
+    n = 128
+    cfg = A.ACDCConfig(n=n, k=1, bias=True, method="pallas")
+    p = A.init_acdc_params(jax.random.PRNGKey(9), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(10), (6, n))
+    got = A.acdc_cascade(p, x, cfg)
+    want = ref.acdc_fused_ref(x, p["a"][0], p["d"][0], p["bias"][0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Integration: model zoo projections + dist train step.
+# ---------------------------------------------------------------------------
+
+def test_linear_apply_pallas_matches_matmul_method():
+    """The zoo's projection factory picks up the fused cascade unchanged:
+    same params, same output, only the method differs."""
+    from repro.configs import registry
+    from repro.models import linear as linear_mod
+
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    cfg_p = dataclasses.replace(cfg, sell_kind="acdc", sell_method="pallas")
+    cfg_m = dataclasses.replace(cfg, sell_kind="acdc", sell_method="matmul")
+    n_in = n_out = 256
+    params = linear_mod.linear_init(jax.random.PRNGKey(0), n_in, n_out,
+                                    cfg_p, role="mlp_in")
+    assert "sell" in params
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, n_in))
+    yp = linear_mod.linear_apply(params, x, n_in, n_out, cfg_p, "mlp_in")
+    ym = linear_mod.linear_apply(params, x, n_in, n_out, cfg_m, "mlp_in")
+    assert yp.shape == (2, 4, n_out)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(ym), atol=2e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.slow
+def test_train_step_runs_with_pallas_sell():
+    """dist/steps.make_train_step trains through the fused cascade VJP."""
+    from repro.configs import registry
+    from repro.data import DataConfig, SyntheticLM
+    from repro.dist import steps as steps_mod
+    from repro.models import get_model
+    from repro.optim import OptimizerConfig, constant_schedule, make_optimizer
+
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    cfg = dataclasses.replace(cfg, sell_kind="acdc", sell_method="pallas")
+    model = get_model(cfg)
+    opt = make_optimizer(OptimizerConfig(lr=1e-3, weight_decay=0.0),
+                         constant_schedule(1e-3))
+    step = jax.jit(steps_mod.make_train_step(model, cfg, opt))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=2))
+    state = steps_mod.init_state(model, cfg, opt, jax.random.PRNGKey(0))
+    state, m0 = step(state, data.batch_at(0))
+    state, m1 = step(state, data.batch_at(1))
+    assert np.isfinite(float(m0["loss"])) and np.isfinite(float(m1["loss"]))
+    assert int(state["step"]) == 2

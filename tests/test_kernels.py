@@ -131,6 +131,42 @@ def test_acdc_kernel_property_sweep(m, n, seed):
                                atol=5e-4, rtol=1e-3)
 
 
+@pytest.mark.parametrize("relu,permute", [(False, False), (True, True)])
+def test_acdc_cascade_op_vs_layered_ref(relu, permute):
+    """ops.acdc_cascade_op == K chained ref layers with jnp interleaves."""
+    n, k, m = 128, 4, 12
+    r = jax.random.PRNGKey(21)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    b = 0.1 * jax.random.normal(jax.random.fold_in(r, 3), (k, n))
+    got = ops.acdc_cascade_op(x, a, d, b, relu=relu, permute=permute)
+
+    perm = jnp.asarray(T.make_riffle(n))
+    h = x
+    for i in range(k):
+        h = ref.acdc_fused_ref(h, a[i], d[i], b[i])
+        if i < k - 1:
+            if relu:
+                h = jnp.maximum(h, 0)
+            if permute:
+                h = h[..., perm]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(h),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_cascade_vmem_budget_gate():
+    """fits_vmem: small cascades fuse; N beyond MAX_FUSED_N never does,
+    and the riffle's third transform matrix tightens the budget."""
+    from repro.kernels import acdc_cascade_fused as cascade_mod
+    assert cascade_mod.fits_vmem(256, 8, permute=True, bias=True)
+    assert not cascade_mod.fits_vmem(
+        fused_mod.MAX_FUSED_N * 2, 2, permute=False, bias=False)
+    assert (cascade_mod.cascade_vmem_bytes(1024, 4, permute=True, bias=True)
+            > cascade_mod.cascade_vmem_bytes(1024, 4, permute=False,
+                                             bias=True))
+
+
 def test_kernel_agrees_with_core_acdc():
     """core.acdc(method='pallas') routes through the kernel and matches
     the fft/matmul methods."""
