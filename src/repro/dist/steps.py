@@ -163,7 +163,7 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1,
 
 def make_serve_step(model, cfg, sample: str = "greedy",
                     temperature: float = 1.0, top_k: int = 0,
-                    top_p: float = 0.0) -> Callable:
+                    top_p: float = 0.0, paged: bool = False) -> Callable:
     """Build ``step(params, cache, tokens, position, rng) -> (next, cache)``.
 
     One decode step against the family-specific cache (KV for attention
@@ -171,11 +171,30 @@ def make_serve_step(model, cfg, sample: str = "greedy",
     hybrid) followed by on-device sampling: ``greedy`` argmax or ``temp``
     temperature-scaled categorical with optional top-k / top-p filtering
     (:mod:`repro.serving.sampler`).
+
+    ``paged=True`` decodes against the paged block KV cache instead; the
+    step signature gains the per-slot block tables:
+    ``step(params, cache, tokens, position, block_tables, rng)``.
     """
     from repro.serving import sampler as sampler_mod  # avoid import cycle
 
     if sample not in ("greedy", "temp"):
         raise ValueError(f"unknown sampler {sample!r}")
+
+    if paged:
+        if model.decode_step_paged is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode path")
+
+        def step(params, cache, tokens, position, block_tables, rng):
+            logits, new_cache = model.decode_step_paged(
+                params, cache, tokens, position, block_tables, cfg)
+            nxt = sampler_mod.sample(rng, logits, method=sample,
+                                     temperature=temperature, top_k=top_k,
+                                     top_p=top_p)
+            return nxt, new_cache
+
+        return step
 
     def step(params, cache, tokens, position, rng):
         logits, new_cache = model.decode_step(params, cache, tokens,
@@ -188,7 +207,8 @@ def make_serve_step(model, cfg, sample: str = "greedy",
     return step
 
 
-def make_prefill_step(model, cfg, full_logits: bool = False) -> Callable:
+def make_prefill_step(model, cfg, full_logits: bool = False,
+                      paged: bool = False) -> Callable:
     """Build ``step(params, cache, tokens, lengths[, fe]) -> (logits, cache)``.
 
     One lowered program runs the model over the whole (right-padded) prompt
@@ -202,9 +222,45 @@ def make_prefill_step(model, cfg, full_logits: bool = False) -> Callable:
     Returns the logits at each row's last real token (B, V) by default, or
     the full (B, S, V) grid with ``full_logits=True`` (equivalence tests,
     dry-run lowering).
+
+    ``paged=True`` builds the admission program for the paged engine
+    instead: ``step(params, cache, template, tokens, lengths, phys_blocks,
+    slot[, fe]) -> (last_logits, cache)``.  The batch-1 prefill runs into
+    the dense ``template`` slab, whose KV is then page-scattered through
+    ``phys_blocks`` (the slot's block-table row, unmapped entries already
+    routed to the trash page) while batch-indexed leaves (encdec cross KV,
+    zamba2 SSM/conv state) slot-insert at ``slot`` — prefill and the paged
+    cache scatter stay ONE lowered program per admission.
     """
     if model.prefill is None:
         raise ValueError(f"family {cfg.family!r} has no prefill path")
+
+    if paged:
+        if model.init_cache_paged is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged cache")
+        from repro.models import attention as attn_mod
+
+        def step(params, cache, template, tokens, lengths, phys_blocks,
+                 slot, frontend_embeds=None):
+            logits, slot_cache = model.prefill(params, template, tokens,
+                                               cfg, lengths, frontend_embeds)
+            new_cache = {}
+            for key, leaf in cache.items():
+                if key.endswith("_pages"):
+                    slab = slot_cache[key[: -len("_pages")]]
+                    new_cache[key] = attn_mod.scatter_prefill_pages(
+                        leaf, slab, phys_blocks)
+                else:
+                    new_cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                        leaf, slot_cache[key].astype(leaf.dtype), slot,
+                        axis=1)
+            idx = jnp.maximum(lengths - 1, 0)
+            last = jnp.take_along_axis(logits, idx[:, None, None],
+                                       axis=1)[:, 0]
+            return last, new_cache
+
+        return step
 
     def step(params, cache, tokens, lengths, frontend_embeds=None):
         logits, new_cache = model.prefill(params, cache, tokens, cfg,

@@ -8,6 +8,9 @@ into batch slots (one lowered prefill program per admission), advances all
 active slots with one fused decode step per tick, and evicts finished
 requests so the batch stays full.  ``--static`` falls back to plain
 batched prefill + lockstep decode (no continuous batching) for A/B runs.
+``--paged --block-size 16 [--blocks N]`` serves from the paged block KV
+cache: all slots draw pages from one global pool sized for the traffic
+mix instead of each reserving a dense ``max_len`` slab.
 """
 
 from __future__ import annotations
@@ -78,7 +81,13 @@ def run_engine(model, cfg, params, args, rng):
                  max_len=args.prompt_len + args.gen + 1,
                  max_prompt_len=args.prompt_len, sample=args.sample,
                  temperature=args.temperature, top_k=args.top_k,
-                 top_p=args.top_p)
+                 top_p=args.top_p, paged=args.paged,
+                 block_size=args.block_size, n_blocks=args.blocks)
+    if args.paged:
+        print(f"[paged] block_size={eng.block_size} "
+              f"pool={eng.allocator.n_blocks} blocks "
+              f"(dense parity {args.slots * eng.max_blocks}) | "
+              f"cache {eng.cache_bytes / 1e6:.2f} MB")
     reqs = make_ragged_requests(cfg.vocab_size, args.requests,
                                 args.prompt_len, args.gen)
     if cfg.family == "encdec":
@@ -95,6 +104,11 @@ def run_engine(model, cfg, params, args, rng):
           f"{eng.stats['prefill_dispatches']} prefill dispatches | "
           f"{eng.stats['decode_ticks']} decode ticks | "
           f"{toks} tokens in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s)")
+    if args.paged:
+        print(f"[paged] peak {eng.allocator.peak_in_use}/"
+              f"{eng.allocator.n_blocks} blocks in use | "
+              f"{eng.stats['stalled_slot_ticks']} stalled slot-ticks | "
+              f"{eng.stats['preempted']} preempted")
     print(f"[engine] ttft p50 {np.median(ttft):.3f}s max {max(ttft):.3f}s")
     print("sample generations (token ids):")
     for r in reqs[:2]:
@@ -120,7 +134,18 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=0.0)
     ap.add_argument("--static", action="store_true",
                     help="batched prefill + lockstep decode, no slot reuse")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block KV cache: slots draw fixed-size pages "
+                         "from one global pool instead of each reserving "
+                         "a dense max_len slab")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="token positions per KV page (paged mode)")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="pool size in pages; default = dense parity "
+                         "(slots * ceil(max_len / block_size))")
     args = ap.parse_args(argv)
+    if args.paged and args.static:
+        ap.error("--paged applies to the engine path, not --static")
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))

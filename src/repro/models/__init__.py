@@ -9,6 +9,13 @@
     model.decode_step(params, cache, t, pos, cfg) -> (logits, cache)
     model.prefill(params, cache, tokens, cfg, lengths, fe)
                                              -> (logits (B,S,V), cache)
+    model.init_cache_paged(cfg, batch, n_blocks, block_size)
+                                             -> paged decode cache
+    model.decode_step_paged(params, cache, t, pos, tables, cfg)
+                                             -> (logits, cache)
+
+The paged pair is None for families with no length-proportional KV to
+page (mamba2's recurrent state is O(1) per slot by construction).
 """
 
 from __future__ import annotations
@@ -28,6 +35,8 @@ class Model:
     init_cache: Optional[Callable] = None
     decode_step: Optional[Callable] = None
     prefill: Optional[Callable] = None
+    init_cache_paged: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
     module: Any = None
 
 
@@ -48,5 +57,7 @@ def get_model(cfg: ModelConfig) -> Model:
         init_cache=getattr(mod, "init_cache", None),
         decode_step=getattr(mod, "decode_step", None),
         prefill=getattr(mod, "prefill", None),
+        init_cache_paged=getattr(mod, "init_cache_paged", None),
+        decode_step_paged=getattr(mod, "decode_step_paged", None),
         module=mod,
     )

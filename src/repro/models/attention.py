@@ -232,6 +232,92 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_kv_cache_paged(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        n_layers: int, dtype) -> dict:
+    """Global page pool replacing the per-slot ``max_len`` slabs.
+
+    One extra physical page (index ``n_blocks``) is the write sink: decode
+    writes from parked/stalled batch rows are routed there instead of into
+    a mapped page, and nothing ever reads it back.  Block ids and per-slot
+    tables are owned by :class:`repro.serving.blocks.BlockAllocator`.
+    """
+    dh = cfg.head_dim_
+    shape = (n_layers, n_blocks + 1, block_size, cfg.n_kv_heads, dh)
+    return {
+        "k_pages": jnp.zeros(shape, dtype),
+        "v_pages": jnp.zeros(shape, dtype),
+    }
+
+
+def scatter_prefill_pages(
+    pages: jax.Array,                # (L, NB+1, bs, ...) page pool
+    slab: jax.Array,                 # (L, 1, S, ...) dense prefill slab
+    phys_blocks: jax.Array,          # (S // bs,) physical page per block
+) -> jax.Array:
+    """Paged prefill scatter: lay a batch-1 dense KV slab into the pool.
+
+    ``phys_blocks`` is the slot's block-table row with unmapped entries
+    already routed to the trash page, so blocks beyond the prompt write
+    harmlessly into the sink.  Whole pages are overwritten (zeros beyond
+    the prompt length included), so a remapped page needs no reset pass.
+    """
+    n_layers = slab.shape[0]
+    s = slab.shape[2]
+    bs = pages.shape[2]
+    vals = slab[:, 0].reshape(n_layers, s // bs, bs, *slab.shape[3:])
+    return pages.at[:, phys_blocks].set(vals.astype(pages.dtype))
+
+
+def attention_decode_paged(
+    params: dict,
+    x: jax.Array,                   # (B, 1, D)
+    k_pages: jax.Array,             # (NB+1, bs, Hkv, Dh) — this layer's pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,        # (B, MB) int32, -1 = unmapped
+    position: jax.Array,            # (B,) current index
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged twin of :func:`attention_decode`.
+
+    The new token's K/V is scattered with ``set`` into its slot in the
+    tail page (``block_tables[b, position // bs]``, offset
+    ``position % bs``); rows whose tail page is unmapped or whose position
+    is at/beyond the virtual row length (parked or stalled slots) write to
+    the trash page instead.  K/V for attention is gathered page-wise
+    through the block table; unmapped entries read page 0, whose stale
+    contents sit beyond the causal frontier and are masked.
+    """
+    b = x.shape[0]
+    n_pages, bs = k_pages.shape[0], k_pages.shape[1]
+    mb = block_tables.shape[1]
+    virtual = mb * bs
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos2 = position[:, None]  # (B,1)
+    q = apply_rope(q, pos2, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_fraction, cfg.rope_theta)
+
+    blk_idx = jnp.minimum(position // bs, mb - 1)
+    phys = block_tables[jnp.arange(b), blk_idx]                 # (B,)
+    writable = jnp.logical_and(phys >= 0, position < virtual)
+    phys = jnp.where(writable, phys, n_pages - 1)               # sink
+    off = position % bs
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+
+    tbl = jnp.where(block_tables >= 0, block_tables, 0)         # (B, MB)
+    ck = k_pages[tbl].reshape(b, virtual, *k_pages.shape[2:])
+    cv = v_pages[tbl].reshape(b, virtual, *v_pages.shape[2:])
+    k_pos = jnp.arange(virtual, dtype=jnp.int32)[None, :]
+    mask = causal_window_mask(pos2, k_pos, window)              # (B, 1, V)
+    out = _sdpa(q, ck, cv, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(b, 1, cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, k_pages, v_pages
+
+
 def attention_decode(
     params: dict,
     x: jax.Array,                   # (B, 1, D)

@@ -156,6 +156,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def init_cache_paged(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int) -> dict:
+    """Paged decoder self-attention KV.  The cross KV stays dense: it is
+    frames-sized per slot (static, written once at prefill), so there is
+    no ragged-length waste to reclaim by paging it."""
+    kv = attn_mod.init_kv_cache_paged(cfg, n_blocks, block_size,
+                                      cfg.n_layers, cfg.compute_dtype)
+    frames = cfg.n_frontend_tokens or 128
+    dh = cfg.head_dim_
+    return {
+        "k_pages": kv["k_pages"],
+        "v_pages": kv["v_pages"],
+        "xk": jnp.zeros((cfg.n_layers, batch, frames, cfg.n_kv_heads, dh),
+                        cfg.compute_dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, frames, cfg.n_kv_heads, dh),
+                        cfg.compute_dtype),
+    }
+
+
 def prefill_cross(params: dict, cache: dict, frames: jax.Array,
                   cfg: ModelConfig) -> dict:
     """Run the encoder once and precompute per-layer cross KV."""
@@ -267,3 +286,45 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
     return logits, {**cache, "k": nk, "v": nv}
+
+
+def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
+                      position: jax.Array, block_tables: jax.Array,
+                      cfg: ModelConfig):
+    """Mirror of :func:`decode_step` with self-attention KV paged; the
+    precomputed cross KV rides along dense and untouched."""
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens[:, None], dtype)
+    window = jnp.zeros((), jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        layer, kp, vp, xk, xv = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, kp, vp = attn_mod.attention_decode_paged(
+            layer["attn"], h, kp, vp, block_tables, position, window, cfg)
+        x = x + out
+        # cross-attention against the precomputed encoder KV
+        h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
+        dh = cfg.head_dim_
+        q = attn_mod.linear.linear_apply(
+            layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
+            cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
+        out = attn_mod._sdpa(q, xk, xv, None, cfg)
+        out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
+        out = attn_mod.linear.linear_apply(
+            layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
+            cfg, "attn_out")
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (kp, vp)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["k_pages"], cache["v_pages"],
+         cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, {**cache, "k_pages": nk, "v_pages": nv}

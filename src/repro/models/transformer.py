@@ -141,6 +141,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
                                   cfg.compute_dtype)
 
 
+def init_cache_paged(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int) -> dict:
+    """Paged decode cache: one global page pool shared by all slots
+    (``batch`` is unused here — KV is the only state and it is pooled)."""
+    del batch
+    return attn_mod.init_kv_cache_paged(cfg, n_blocks, block_size,
+                                        cfg.n_layers, cfg.compute_dtype)
+
+
 def prefill(
     params: dict,
     cache: dict,
@@ -224,3 +233,39 @@ def decode_step(
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
     return logits, {"k": new_k, "v": new_v}
+
+
+def decode_step_paged(
+    params: dict,
+    cache: dict,              # {"k_pages", "v_pages"}: (L, NB+1, bs, Hkv, Dh)
+    tokens: jax.Array,        # (B,) current token ids
+    position: jax.Array,      # (B,) current position
+    block_tables: jax.Array,  # (B, MB) int32, -1 = unmapped
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict]:
+    """One decode step against the paged KV pool -> (logits (B, V), cache)."""
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens[:, None], dtype)  # (B,1,D)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        x = carry
+        layer, window, kp, vp = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, kp, vp = attn_mod.attention_decode_paged(
+            layer["attn"], h, kp, vp, block_tables, position, window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        if "moe" in layer:
+            x = x + mlp_mod.moe(layer["moe"], h, cfg)
+        else:
+            x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (kp, vp)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k_pages"],
+                  cache["v_pages"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, {"k_pages": new_k, "v_pages": new_v}

@@ -182,6 +182,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return cache
 
 
+def init_cache_paged(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int) -> dict:
+    """Page only the shared-attention KV — the length-proportional state.
+    Mamba SSM/conv state is O(1) per slot regardless of sequence length,
+    so it stays dense (there is no worst-case-length slab to reclaim)."""
+    n_apps = len(_n_groups(cfg))
+    cache = mamba_mod.init_ssm_cache(cfg, batch, cfg.n_layers,
+                                     cfg.compute_dtype)
+    kv = attn_mod.init_kv_cache_paged(cfg, n_blocks, block_size, n_apps,
+                                      cfg.compute_dtype)
+    cache["attn_k_pages"] = kv["k_pages"]
+    cache["attn_v_pages"] = kv["v_pages"]
+    return cache
+
+
 def decode_step(params: dict, cache: dict, tokens: jax.Array,
                 position: jax.Array, cfg: ModelConfig):
     dtype = cfg.compute_dtype
@@ -233,4 +248,61 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
         "conv": jnp.concatenate(new_conv, axis=0),
         "attn_k": jnp.stack(new_k, axis=0),
         "attn_v": jnp.stack(new_v, axis=0),
+    }
+
+
+def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
+                      position: jax.Array, block_tables: jax.Array,
+                      cfg: ModelConfig):
+    """Mirror of :func:`decode_step` with each shared-attention application
+    reading/writing its own paged KV pool; SSM/conv state stays dense."""
+    dtype = cfg.compute_dtype
+    emb = embed_lookup(params["embed"], tokens[:, None], dtype)
+
+    def body(carry, xs):
+        x = carry
+        layer, ssm, conv = xs
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        out, ssm, conv = mamba_mod.mamba_block_decode(
+            layer["mixer"], h, ssm, conv, cfg)
+        return x + out, (ssm, conv)
+
+    x = emb
+    start = 0
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    window = jnp.zeros((), jnp.int32)
+    for app, size in enumerate(_n_groups(cfg)):
+        sl = lambda p: p[start : start + size]
+        group = (jax.tree.map(sl, params["layers"]),
+                 cache["ssm"][start : start + size],
+                 cache["conv"][start : start + size])
+        x, (ssm, conv) = jax.lax.scan(body, x, group,
+                                      unroll=cfg.scan_unroll)
+        new_ssm.append(ssm)
+        new_conv.append(conv)
+        # shared attention application `app`
+        d = cfg.d_model
+        h = linear.linear_apply(params["shared"]["in_proj"],
+                                jnp.concatenate([x, emb], axis=-1),
+                                2 * d, d, cfg, "shared_in")
+        a = rms_norm(h, params["shared"]["norm1"]["scale"], cfg.norm_eps)
+        out, kp, vp = attn_mod.attention_decode_paged(
+            params["shared"]["attn"], a,
+            cache["attn_k_pages"][app], cache["attn_v_pages"][app],
+            block_tables, position, window, cfg)
+        h = h + out
+        m = rms_norm(h, params["shared"]["norm2"]["scale"], cfg.norm_eps)
+        h = h + mlp_mod.mlp(params["shared"]["mlp"], m, cfg)
+        x = x + h
+        new_k.append(kp)
+        new_v.append(vp)
+        start += size
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)[:, 0]
+    return logits, {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "attn_k_pages": jnp.stack(new_k, axis=0),
+        "attn_v_pages": jnp.stack(new_v, axis=0),
     }

@@ -29,18 +29,53 @@ where the one-hot scatter writes nothing.  Per-request compute is
 batch-row-independent, so outputs are identical to running each request
 alone (pinned by tests/test_serving_engine.py).
 
+Paged block KV cache
+--------------------
+``Engine(..., paged=True, block_size=B, n_blocks=N)`` replaces the dense
+per-slot ``max_len`` slabs with ONE global pool of ``N`` pages of ``B``
+token positions each (``blocks.py``), so short requests stop paying a long
+request's worst-case memory.  The device layout (shared with
+``repro.models.attention``):
+
+* page pool ``(n_layers, N + 1, B, Hkv, Dh)`` per K and V — physical page
+  ``N`` is the write sink for parked/stalled rows, never read back;
+* block table: static ``(n_slots, ceil(max_len / B))`` int32, entry
+  ``[slot, i]`` = physical page for token positions ``[i*B, (i+1)*B)``,
+  ``-1`` when unmapped.  The host-side :class:`BlockAllocator` owns it and
+  the engine ships it to the device each tick.
+
+Admission contract: the FIFO head is admitted only when
+``ceil((prompt_len + 1) / B)`` pages are free — prompt plus room for the
+first decode token — so admission never strands a request with nowhere to
+write.  Decode growth maps pages lazily each tick; a slot the pool cannot
+serve *stalls* (parks for the tick, produces nothing, resumes when an
+eviction frees pages), and an all-stalled deadlock is broken by evicting
+the stalled request holding the most pages.  Because slots are compute-
+isolated, greedy output streams under paging are identical to the dense
+cache (pinned by tests/test_serving_paged.py); only scheduling/latency
+can shift when the pool is tight.  Families: transformer and encdec page
+their (self-attention) KV, zamba2 pages only the shared-attention KV
+(Mamba SSM/conv state is O(1) per slot and stays dense), mamba2 has
+nothing to page by construction.
+
 Tick loop
 ---------
 ``tick()`` = admit (0+ prefill dispatches, one per admission) + one fused
 decode step over all ``n_slots`` rows + evict.  All shapes are static, so
 the engine compiles exactly two programs — one prefill, one decode — no
-matter how traffic arrives.  ``run(requests)`` ticks until drained.
+matter how traffic arrives (paged mode fuses the admission page scatter
+into the prefill program, keeping the count at two).  ``run(requests)``
+ticks until drained, raising once ``max_ticks`` ticks have run without
+draining.
 
 Sampling (``sampler.py``) is shared between the fused decode step and the
 admission path: greedy, or temperature with top-k / top-p filtering.
+Decode ticks and admissions draw from disjoint chained ``fold_in``
+streams, so tick counters and request ids can never collide.
 """
 
 from repro.dist.steps import make_prefill_step, make_serve_step  # noqa: F401
+from repro.serving.blocks import BlockAllocator  # noqa: F401
 from repro.serving.engine import Engine  # noqa: F401
 from repro.serving.request import Request, RequestStatus  # noqa: F401
 from repro.serving.sampler import (  # noqa: F401

@@ -10,8 +10,8 @@ tick loop:
    from the last-position logits (this is also the time-to-first-token
    mark);
 2. **decode** — one fused decode step advances EVERY active slot by one
-   token; free slots ride along parked at ``position = max_len`` where the
-   one-hot cache scatter writes nothing;
+   token; free slots ride along parked at the row length where the cache
+   scatter writes nothing;
 3. **evict** — requests that hit EOS, their ``max_new_tokens`` budget, or
    the cache ceiling release their slot immediately, so the next tick's
    admission refills the batch.
@@ -22,13 +22,25 @@ is always ``n_slots`` wide — so the engine compiles exactly two programs
 batch-row-independent (each slot attends only to its own cache row), so a
 request's output stream is identical to running it alone; the engine test
 pins that down.
+
+Paged mode (``paged=True``) swaps the dense per-slot ``max_len`` slabs for
+a global pool of ``block_size``-token pages managed by
+:class:`repro.serving.blocks.BlockAllocator`: admission is gated on free
+blocks for the prompt plus one decode token, decode growth maps pages
+lazily, and a slot whose next page cannot be mapped *stalls* (parks for
+the tick, producing nothing) until an eviction frees pages — so the pool
+can be sized for the traffic mix instead of ``n_slots * max_len`` while
+greedy output streams stay identical to the dense cache.  If every active
+slot is stalled at once the engine breaks the deadlock by evicting the
+stalled request holding the most pages (``finish_reason="cache_full"``,
+counted in ``stats["preempted"]``).
 """
 
 from __future__ import annotations
 
 import functools
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +48,7 @@ import numpy as np
 
 from repro.dist import steps as steps_mod
 from repro.serving import sampler as sampler_mod
+from repro.serving.blocks import BlockAllocator
 from repro.serving.request import Request, RequestStatus
 from repro.serving.scheduler import Scheduler
 
@@ -54,45 +67,113 @@ class Engine:
         top_k: int = 0,
         top_p: float = 0.0,
         rng: Optional[jax.Array] = None,
+        paged: bool = False,
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
     ):
         if model.prefill is None or model.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve")
+        if paged and (model.init_cache_paged is None
+                      or model.decode_step_paged is None):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged KV cache (its decode "
+                "state is not length-proportional); serve it dense")
         self.model = model
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.max_prompt_len = max_prompt_len or max_len // 2
-        self.scheduler = Scheduler(n_slots)
+        self.paged = paged
         self._rng = jax.random.PRNGKey(0) if rng is None else rng
+        # disjoint RNG streams: decode-tick keys chain through fold_in(_, 0)
+        # and admission keys through fold_in(_, 1), so a tick counter can
+        # never collide with a request id (bit-packing both into one fold
+        # value was non-injective: tick 2**20 reused tick 0's key and
+        # rid >= 2**20 collided with decode keys)
+        self._rng_decode = jax.random.fold_in(self._rng, 0)
+        self._rng_admit = jax.random.fold_in(self._rng, 1)
 
-        self._cache = model.init_cache(cfg, n_slots, max_len)
-        # template for per-admission prefill: batch-1, same max_len slabs
-        self._slot_template = model.init_cache(cfg, 1, max_len)
+        if paged:
+            self.block_size = block_size
+            self.max_blocks = -(-max_len // block_size)
+            # virtual per-slot row length: max_len rounded up to whole
+            # pages; the engine still stops requests at max_len, the tail
+            # padding just keeps the page-wise gather rectangular
+            self._virtual = self.max_blocks * block_size
+            if n_blocks is None:
+                n_blocks = n_slots * self.max_blocks  # dense-parity pool
+            min_pool = -(-(self.max_prompt_len + 1) // block_size)
+            if n_blocks < min_pool:
+                raise ValueError(
+                    f"pool of {n_blocks} blocks cannot admit a "
+                    f"max_prompt_len={self.max_prompt_len} request "
+                    f"(needs {min_pool})")
+            self.allocator = BlockAllocator(n_blocks, block_size, n_slots,
+                                            self.max_blocks)
+            self.scheduler = Scheduler(
+                n_slots,
+                admit_ok=lambda r: self.allocator.can_admit(r.prompt_len))
+            self._park = self._virtual
+            self._cache = model.init_cache_paged(cfg, n_slots, n_blocks,
+                                                 block_size)
+            # batch-1 dense template the admission prefill writes through
+            # before the in-program page scatter
+            self._slot_template = model.init_cache(cfg, 1, self._virtual)
+            self._prefill = jax.jit(steps_mod.make_prefill_step(
+                model, cfg, paged=True), donate_argnums=(1,))
+            self._decode = jax.jit(steps_mod.make_serve_step(
+                model, cfg, sample=sample, temperature=temperature,
+                top_k=top_k, top_p=top_p, paged=True), donate_argnums=(1,))
+            self._insert = None
+        else:
+            self.allocator = None
+            self.scheduler = Scheduler(n_slots)
+            self._park = max_len
+            self._cache = model.init_cache(cfg, n_slots, max_len)
+            # template for per-admission prefill: batch-1, same max_len slabs
+            self._slot_template = model.init_cache(cfg, 1, max_len)
+            # the big cache is donated through decode/insert: it is the
+            # dominant serving allocation and both calls replace
+            # self._cache wholesale, so XLA can update the buffers in
+            # place instead of copying the whole multi-layer slab per tick
+            self._prefill = jax.jit(steps_mod.make_prefill_step(model, cfg))
+            self._decode = jax.jit(steps_mod.make_serve_step(
+                model, cfg, sample=sample, temperature=temperature,
+                top_k=top_k, top_p=top_p), donate_argnums=(1,))
+
+            def insert(cache, slot_cache, slot):
+                return jax.tree.map(
+                    lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                        c, s.astype(c.dtype), slot, axis=1),
+                    cache, slot_cache)
+
+            self._insert = jax.jit(insert, donate_argnums=(0,))
+
         self._tokens = np.zeros((n_slots,), np.int32)
-        self._positions = np.full((n_slots,), max_len, np.int32)  # parked
-
-        # the big cache is donated through decode/insert: it is the dominant
-        # serving allocation and both calls replace self._cache wholesale,
-        # so XLA can update the buffers in place instead of copying the
-        # whole multi-layer slab every tick
-        self._prefill = jax.jit(steps_mod.make_prefill_step(model, cfg))
-        self._decode = jax.jit(steps_mod.make_serve_step(
-            model, cfg, sample=sample, temperature=temperature,
-            top_k=top_k, top_p=top_p), donate_argnums=(1,))
+        self._positions = np.full((n_slots,), self._park, np.int32)
+        self._stalled: Set[int] = set()
         self._sample = jax.jit(functools.partial(
             sampler_mod.sample, method=sample, temperature=temperature,
             top_k=top_k, top_p=top_p))
-
-        def insert(cache, slot_cache, slot):
-            return jax.tree.map(
-                lambda c, s: jax.lax.dynamic_update_slice_in_dim(
-                    c, s.astype(c.dtype), slot, axis=1),
-                cache, slot_cache)
-
-        self._insert = jax.jit(insert, donate_argnums=(0,))
         self.stats = {"prefill_dispatches": 0, "decode_ticks": 0,
-                      "tokens_out": 0, "finished": 0}
+                      "tokens_out": 0, "finished": 0, "preempted": 0,
+                      "stalled_slot_ticks": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def cache_bytes(self) -> int:
+        """Bytes held by the decode cache (the dominant serving
+        allocation): dense slabs or the paged pool, whichever is live."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self._cache))
+
+    def _decode_rng(self, tick: int) -> jax.Array:
+        return jax.random.fold_in(self._rng_decode, tick)
+
+    def _admit_rng(self, rid: int) -> jax.Array:
+        return jax.random.fold_in(self._rng_admit, rid)
 
     # -- submission -------------------------------------------------------
 
@@ -116,19 +197,41 @@ class Engine:
 
     def tick(self) -> int:
         """Admit + one fused decode step; returns #active slots advanced."""
-        for slot, req in self.scheduler.admit():
-            self._admit(slot, req)
+        if self.paged:
+            # one at a time: each admission's block allocation must be
+            # visible to the next can_admit capacity check
+            while True:
+                admitted = self.scheduler.admit(limit=1)
+                if not admitted:
+                    break
+                self._admit(*admitted[0])
+            self._ensure_blocks()
+        else:
+            for slot, req in self.scheduler.admit():
+                self._admit(slot, req)
         active = self.scheduler.active()
         if active:
-            rng = jax.random.fold_in(self._rng, 1 << 20
-                                     | self.stats["decode_ticks"])
-            tok, self._cache = self._decode(
-                self.params, self._cache, jnp.asarray(self._tokens),
-                jnp.asarray(self._positions), rng)
+            rng = self._decode_rng(self.stats["decode_ticks"])
+            t0 = time.perf_counter()
+            if self.paged:
+                pos = self._positions.copy()
+                for slot in self._stalled:
+                    pos[slot] = self._park  # no write, no token this tick
+                tok, self._cache = self._decode(
+                    self.params, self._cache, jnp.asarray(self._tokens),
+                    jnp.asarray(pos), jnp.asarray(self.allocator.table), rng)
+            else:
+                tok, self._cache = self._decode(
+                    self.params, self._cache, jnp.asarray(self._tokens),
+                    jnp.asarray(self._positions), rng)
             tok_np = np.asarray(tok)
+            self.stats["decode_s"] += time.perf_counter() - t0
             self.stats["decode_ticks"] += 1
+            self.stats["stalled_slot_ticks"] += len(self._stalled)
             now = time.time()
             for slot, req in active:
+                if slot in self._stalled:
+                    continue  # parked this tick: its sampled token is junk
                 t = int(tok_np[slot])
                 req.generated.append(t)
                 self.stats["tokens_out"] += 1
@@ -144,10 +247,10 @@ class Engine:
             self.submit(r)
         ticks = 0
         while self.scheduler.has_work:
+            if max_ticks is not None and ticks >= max_ticks:
+                raise RuntimeError(f"engine not drained after {ticks} ticks")
             self.tick()
             ticks += 1
-            if max_ticks is not None and ticks > max_ticks:
-                raise RuntimeError(f"engine not drained after {ticks} ticks")
         return list(requests)
 
     # -- internals --------------------------------------------------------
@@ -158,19 +261,48 @@ class Engine:
         toks[0, : req.prompt_len] = np.asarray(req.prompt, np.int32)
         lengths = jnp.asarray([req.prompt_len], jnp.int32)
         fe = getattr(req, "frontend_embeds", None)
-        last_logits, slot_cache = self._prefill(
-            self.params, self._slot_template, jnp.asarray(toks), lengths, fe)
+        t0 = time.perf_counter()
+        if self.paged:
+            self.allocator.alloc_slot(slot, req.prompt_len)
+            last_logits, self._cache = self._prefill(
+                self.params, self._cache, self._slot_template,
+                jnp.asarray(toks), lengths,
+                jnp.asarray(self.allocator.phys_row(slot)),
+                jnp.int32(slot), fe)
+        else:
+            last_logits, slot_cache = self._prefill(
+                self.params, self._slot_template, jnp.asarray(toks), lengths,
+                fe)
+            self._cache = self._insert(self._cache, slot_cache,
+                                       jnp.int32(slot))
+        tok = int(self._sample(self._admit_rng(req.rid), last_logits)[0])
+        self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_dispatches"] += 1
-        self._cache = self._insert(self._cache, slot_cache,
-                                   jnp.int32(slot))
-        tok = int(self._sample(jax.random.fold_in(self._rng, req.rid),
-                               last_logits)[0])
         req.t_first_token = time.time()
         req.generated.append(tok)
         self.stats["tokens_out"] += 1
         self._tokens[slot] = tok
         self._positions[slot] = req.prompt_len
         self._maybe_finish(slot, req, tok, req.t_first_token)
+
+    def _ensure_blocks(self) -> None:
+        """Map each active slot's next write page; stall slots the pool
+        cannot serve, and break an all-stalled deadlock by evicting the
+        stalled request holding the most pages."""
+        self._stalled = set()
+        active = self.scheduler.active()
+        for slot, _ in active:
+            if not self.allocator.ensure(slot, int(self._positions[slot])):
+                self._stalled.add(slot)
+        if self._stalled and len(self._stalled) == len(active):
+            slot, req = max(active,
+                            key=lambda sr: self.allocator.blocks_held(sr[0]))
+            self._finish(slot, req, "cache_full", time.time())
+            self.stats["preempted"] += 1
+            self._stalled.discard(slot)
+            for slot2 in sorted(self._stalled):
+                if self.allocator.ensure(slot2, int(self._positions[slot2])):
+                    self._stalled.discard(slot2)
 
     def _maybe_finish(self, slot: int, req: Request, last_token: int,
                       now: float) -> None:
@@ -183,9 +315,15 @@ class Engine:
             reason = "cache_full"   # no room to write the next token
         if reason is None:
             return
+        self._finish(slot, req, reason, now)
+
+    def _finish(self, slot: int, req: Request, reason: str,
+                now: float) -> None:
         req.status = RequestStatus.FINISHED
         req.finish_reason = reason
         req.t_finish = now
         self.scheduler.release(slot)
-        self._positions[slot] = self.max_len      # park: no cache writes
+        if self.paged:
+            self.allocator.free_slot(slot)
+        self._positions[slot] = self._park      # park: no cache writes
         self.stats["finished"] += 1

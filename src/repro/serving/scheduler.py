@@ -7,21 +7,29 @@ admitted (prefill runs for it, then it joins the fused per-tick decode).
 Finished requests release their slot immediately, so under a steady
 arrival stream the batch stays full — the whole point of continuous over
 static batching: no slot idles while a long request drains.
+
+With a paged KV cache the engine passes ``admit_ok`` (an allocator
+capacity check): the queue head is only admitted when enough free blocks
+exist for its prompt plus the first decode token.  Admission stays strict
+FIFO — a blocked head blocks the queue rather than letting shorter
+requests starve it.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 from repro.serving.request import Request, RequestStatus
 
 
 class Scheduler:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int,
+                 admit_ok: Optional[Callable[[Request], bool]] = None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
+        self._admit_ok = admit_ok
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
 
@@ -37,12 +45,21 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
-    def admit(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the queue (FIFO); returns admissions."""
+    def admit(self, limit: Optional[int] = None) -> List[Tuple[int, Request]]:
+        """Fill free slots from the queue (FIFO); returns admissions.
+
+        ``limit`` caps the number of admissions per call — the paged
+        engine admits one at a time so each admission's block allocation
+        is visible to the next ``admit_ok`` capacity check.
+        """
         out = []
         for slot in self.free_slots():
             if not self.queue:
                 break
+            if limit is not None and len(out) >= limit:
+                break
+            if self._admit_ok is not None and not self._admit_ok(self.queue[0]):
+                break  # FIFO: a capacity-blocked head is not skipped
             req = self.queue.popleft()
             req.status = RequestStatus.ACTIVE
             req.slot = slot

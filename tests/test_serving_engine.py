@@ -146,6 +146,46 @@ def test_engine_rejects_oversized_prompt(qwen):
         eng.submit(Request(rid=1, prompt=[]))
 
 
+def test_engine_run_max_ticks_is_exact(qwen):
+    """run(max_ticks=N) must raise after exactly N ticks, not N+1 (the old
+    ``ticks > max_ticks`` check let one extra tick slip through)."""
+    cfg, model, params = qwen
+    r = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=64)
+    eng = Engine(model, cfg, params, n_slots=1, max_len=128,
+                 max_prompt_len=4)
+    with pytest.raises(RuntimeError, match="after 5 ticks"):
+        eng.run([r], max_ticks=5)
+    assert eng.stats["decode_ticks"] == 5
+
+
+def test_engine_run_max_ticks_not_raised_when_drained(qwen):
+    """A request that drains in exactly max_ticks ticks must not raise."""
+    cfg, model, params = qwen
+    # admission emits token 1, then 3 decode ticks emit tokens 2..4
+    r = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    eng = Engine(model, cfg, params, n_slots=1, max_len=32,
+                 max_prompt_len=4)
+    eng.run([r], max_ticks=3)
+    assert r.done and len(r.generated) == 4
+
+
+def test_engine_rng_streams_disjoint(qwen):
+    """Decode-tick keys and admission keys must never collide — the old
+    packing (``1 << 20 | tick`` vs raw ``rid`` folded into one base key)
+    reused tick 0's key at tick 2**20 and collided rids >= 2**20 with
+    decode ticks.  Boundary values across both streams must be unique."""
+    cfg, model, params = qwen
+    eng = Engine(model, cfg, params, n_slots=1, max_len=16,
+                 max_prompt_len=4)
+    cases = [eng._decode_rng(t) for t in
+             (0, 1, 5, (1 << 20) - 1, 1 << 20, (1 << 20) + 1, 1 << 21)]
+    cases += [eng._admit_rng(r) for r in
+              (0, 1, 5, (1 << 20) - 1, 1 << 20, (1 << 20) | 5, 1 << 21)]
+    keys = {tuple(np.asarray(jax.random.key_data(k)).ravel().tolist())
+            for k in cases}
+    assert len(keys) == len(cases), "RNG stream collision"
+
+
 def test_engine_ttft_marks(qwen):
     cfg, model, params = qwen
     r = Request(rid=0, prompt=[3, 1, 4], max_new_tokens=3)
