@@ -19,6 +19,12 @@ Four modes over the same smoke-scale model and workload:
   cache, with the pool sized from the mix's actual demand (top
   ``n_slots`` per-request page needs) instead of ``n_slots * max_len``.
 
+``--spec`` adds an A/B pair on an ACDC SELL smoke model: ``spec_baseline``
+(the plain continuous engine) vs ``spec`` (truncated-cascade self-draft +
+batched k-token verify), asserting token-identical greedy streams with
+strictly fewer target-model dispatches per generated token, and reporting
+the measured draft acceptance rate.
+
 Accounting is comparable across modes: ``decode_tok_per_s`` is always
 decode-step tokens over decode-step time (the engine modes exclude the
 per-request prefill-sampled first token and the prefill dispatch time —
@@ -32,6 +38,7 @@ the dense slabs while emitting identical greedy token streams.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -126,11 +133,14 @@ def bench_batched_prefill(model, cfg, params, prompts, gen: int):
 
 def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
                      gen: int, n_requests: int, paged: bool = False,
-                     block_size: int = 16, n_blocks=None):
+                     block_size: int = 16, n_blocks=None, spec_k: int = 0,
+                     draft_depth=None, mode: str = None):
     """Ragged Poisson-ish stream: arrivals are interleaved with ticks.
 
     Returns (row, requests) so the paged run can be checked token-for-token
     against the dense run and the pool can be sized from actual demand.
+    ``spec_k > 0`` serves the same workload speculatively (truncated-cascade
+    self-draft at ``draft_depth``).
     """
     reqs = make_ragged_requests(cfg.vocab_size, n_requests, prompt_len, gen,
                                 vary_budget=True)
@@ -142,7 +152,8 @@ def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
 
     eng = Engine(model, cfg, params, n_slots=n_slots,
                  max_len=prompt_len + gen + 1, max_prompt_len=prompt_len,
-                 paged=paged, block_size=block_size, n_blocks=n_blocks)
+                 paged=paged, block_size=block_size, n_blocks=n_blocks,
+                 spec_k=spec_k, draft_depth=draft_depth)
     # warmup both compiled programs on a throwaway request, then snapshot
     # the stats so the report covers only the timed workload
     warm = Request(rid=10**6, prompt=[1, 2, 3], max_new_tokens=2)
@@ -169,8 +180,10 @@ def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
     decode_toks = toks - n_requests
     decode_s = eng.stats["decode_s"] - warm_stats["decode_s"]
     ttft = [r.t_first_token - r.t_submit for r in reqs]
+    if mode is None:
+        mode = "spec" if spec_k else ("paged" if paged else "continuous")
     row = {
-        "mode": "paged" if paged else "continuous",
+        "mode": mode,
         "prefill_dispatches_per_request": 1,
         "prefill_dispatches_total": eng.stats["prefill_dispatches"]
         - warm_stats["prefill_dispatches"],
@@ -196,6 +209,20 @@ def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
             - warm_stats["stalled_slot_ticks"],
             "preempted": eng.stats["preempted"] - warm_stats["preempted"],
         })
+    if spec_k:
+        drafted = eng.stats["drafted"] - warm_stats["drafted"]
+        accepted = eng.stats["accepted"] - warm_stats["accepted"]
+        row.update({
+            "spec_k": spec_k,
+            "draft_depth": eng.draft.depth,
+            "drafted": drafted,
+            "accepted": accepted,
+            "acceptance_rate": accepted / max(drafted, 1),
+            # target-model dispatches per generated decode token: the
+            # speculative win — one verify advances a slot several tokens
+        })
+    row["target_dispatches_per_token"] = (row["decode_ticks"]
+                                          / max(decode_toks, 1))
     return row, reqs
 
 
@@ -214,6 +241,37 @@ def pool_blocks_for_mix(reqs, n_slots: int, prompt_len: int, gen: int,
     return sum(demands[:n_slots])
 
 
+def bench_spec(args):
+    """Speculative vs non-speculative on an ACDC SELL smoke model.
+
+    The truncated-cascade draft needs cascades to truncate, so this runs
+    on the smoke config with ``sell_kind='acdc'`` (K = 4, un-riffled, a
+    near-converged ``sell_init_std`` so the truncated tail approximates
+    the target the way a trained cascade does — see spec/draft.py on why
+    riffled cascades truncate poorly).  The greedy spec stream must be
+    token-identical to the baseline while spending strictly fewer target
+    dispatches per generated token.
+    """
+    cfg = dataclasses.replace(
+        registry.get_smoke_config(args.arch), sell_kind="acdc", sell_k=4,
+        sell_permute=False, sell_init_std=0.02)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    base, base_reqs = bench_continuous(
+        model, cfg, params, args.slots, args.prompt_len, args.gen,
+        args.requests, mode="spec_baseline")
+    spec, spec_reqs = bench_continuous(
+        model, cfg, params, args.slots, args.prompt_len, args.gen,
+        args.requests, spec_k=args.spec_k, draft_depth=2)
+    for b, s in zip(base_reqs, spec_reqs):
+        assert s.generated == b.generated, (
+            f"rid={b.rid}: spec stream diverged from baseline")
+    assert (spec["target_dispatches_per_token"]
+            < base["target_dispatches_per_token"]), (
+        "speculation did not reduce target dispatches per token")
+    return [base, spec]
+
+
 def main(csv: bool = True, argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_1_7b", choices=registry.ARCHS)
@@ -224,6 +282,11 @@ def main(csv: bool = True, argv=None):
     # 8-token pages: at smoke scale the coarser 16-token granularity plus
     # the trash page can round a ragged mix back above the dense footprint
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--spec", action="store_true",
+                    help="also A/B speculative decoding (truncated-cascade "
+                         "draft) against the continuous baseline on an "
+                         "ACDC SELL smoke model")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = registry.get_smoke_config(args.arch)
@@ -248,6 +311,8 @@ def main(csv: bool = True, argv=None):
         cont,
         paged,
     ]
+    if args.spec:
+        rows += bench_spec(args)
     seq, bat = rows[0], rows[1]
     assert bat["prefill_dispatches_per_request"] == 1
     assert seq["prefill_dispatches_per_request"] == args.prompt_len
@@ -272,6 +337,12 @@ def main(csv: bool = True, argv=None):
         "paged_cache_bytes_vs_dense":
             paged["cache_bytes"] / max(cont["cache_bytes"], 1),
     }
+    if args.spec:
+        sbase, srow = rows[-2], rows[-1]
+        out["spec_acceptance_rate"] = srow["acceptance_rate"]
+        out["spec_dispatches_per_token_vs_baseline"] = (
+            srow["target_dispatches_per_token"]
+            / max(sbase["target_dispatches_per_token"], 1e-9))
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_serve.json")
     with open(path, "w") as f:
@@ -284,6 +355,10 @@ def main(csv: bool = True, argv=None):
                          f"(dense={cont['cache_bytes']})"
                          f";peak_blocks={r['peak_blocks_in_use']}"
                          f"/{r['pool_blocks']}")
+            if r["mode"] == "spec":
+                extra = (f";acceptance={r['acceptance_rate']:.3f}"
+                         f";dispatches_per_tok="
+                         f"{r['target_dispatches_per_token']:.3f}")
             print(f"serve_{r['mode']},{r['total_s'] * 1e6:.0f},"
                   f"tok_per_s={r['decode_tok_per_s']:.1f};"
                   f"ttft_s={r['ttft_s']:.3f};"

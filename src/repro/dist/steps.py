@@ -207,6 +207,91 @@ def make_serve_step(model, cfg, sample: str = "greedy",
     return step
 
 
+def make_insert_step() -> Callable:
+    """jit'd slot insert: write a batch-1 slot cache into batch row
+    ``slot`` of the full decode cache (donated — it is the dominant
+    serving allocation and is replaced wholesale, so XLA updates the
+    buffers in place).  Shared by the dense engine's admission path and
+    the speculative draft's slot cache."""
+
+    def insert(cache, slot_cache, slot):
+        return jax.tree.map(
+            lambda c, s: jax.lax.dynamic_update_slice_in_dim(
+                c, s.astype(c.dtype), slot, axis=1),
+            cache, slot_cache)
+
+    return jax.jit(insert, donate_argnums=(0,))
+
+
+def make_verify_step(model, cfg, sample: str = "greedy",
+                     temperature: float = 1.0, top_k: int = 0,
+                     top_p: float = 0.0, paged: bool = False,
+                     park: Optional[int] = None) -> Callable:
+    """Build the speculative-decode verify step — ONE lowered program that
+    appends k+1 tokens per slot, scores them, accepts, and commits.
+
+    ``step(params, cache, tokens (B, k+1), drafts (B, k), draft_logits
+    (B, k, V), position (B,)[, block_tables], rng) ->
+    (accepted (B,), out_tokens (B, k+1), new_cache)``
+
+    ``tokens`` is ``[pending, d_1 .. d_k]`` per row; the model's
+    ``verify_step`` scores every position against the cache (a
+    cache-extending, position-masked mini-prefill), acceptance is
+    exact-match (greedy) or rejection sampling (temp,
+    :mod:`repro.spec.verify`), and the cache is committed in-program:
+    KV leaves keep their set-writes (rejected tail positions sit beyond
+    the rewound frontier), recurrent SSM/conv leaves are re-selected at
+    each row's accepted length from the per-position snapshots.
+    ``out_tokens[:, :n+1]`` is the committed stream (accepted drafts plus
+    the correction/bonus token at index n).
+
+    ``park`` is the engine's parked-row position sentinel (rows at or
+    beyond it — free or stalled slots — commit zero tokens); ``None``
+    treats every row as advancing.
+    """
+    from repro.spec import verify as verify_mod  # avoid import cycle
+
+    if sample not in ("greedy", "temp"):
+        raise ValueError(f"unknown sampler {sample!r}")
+    vfn = model.verify_step_paged if paged else model.verify_step
+    if vfn is None:
+        raise ValueError(
+            f"family {cfg.family!r} has no "
+            f"{'paged ' if paged else ''}speculative verify path")
+
+    def _accept_commit(logits, states, cache, drafts, draft_logits,
+                       position, rng):
+        if sample == "greedy":
+            n, nxt = verify_mod.greedy_accept(logits, drafts)
+        else:
+            n, nxt = verify_mod.rejection_accept(
+                rng, logits, draft_logits, drafts, temperature=temperature,
+                top_k=top_k, top_p=top_p)
+        out = verify_mod.committed_tokens(drafts, n, nxt)
+        if states is not None:
+            advancing = (position < park) if park is not None else True
+            n_adv = jnp.where(advancing, n + 1, 0).astype(jnp.int32)
+            cache = verify_mod.commit_states(cache, states, n_adv)
+        return n, out, cache
+
+    if paged:
+        def step(params, cache, tokens, drafts, draft_logits, position,
+                 block_tables, rng):
+            logits, new_cache, states = vfn(params, cache, tokens, position,
+                                            block_tables, cfg)
+            return _accept_commit(logits, states, new_cache, drafts,
+                                  draft_logits, position, rng)
+
+        return step
+
+    def step(params, cache, tokens, drafts, draft_logits, position, rng):
+        logits, new_cache, states = vfn(params, cache, tokens, position, cfg)
+        return _accept_commit(logits, states, new_cache, drafts,
+                              draft_logits, position, rng)
+
+    return step
+
+
 def make_prefill_step(model, cfg, full_logits: bool = False,
                       paged: bool = False) -> Callable:
     """Build ``step(params, cache, tokens, lengths[, fe]) -> (logits, cache)``.

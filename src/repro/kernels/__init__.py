@@ -17,6 +17,10 @@ Layout (per repo convention):
   diagonals + row tiles.
 * ``scaled_matmul.py``      — blocked (m,n,k) scaled matmul kernel; the
   building block of every > ``MAX_FUSED_N`` regime.
+* ``autotune.py``           — first-call on-device row-block sweep
+  ({64, 128, 256}, memoized per (N, K, dtype, direction)) feeding ``bm``
+  to the fused forward/backward/cascade kernels; returns the old fixed
+  constants off-device so CPU/CI runs are unchanged.
 * ``ops.py``                — jit'd public wrappers + custom VJPs:
   per-layer ``acdc_fused``/``acdc_fused_nobias`` (fused Pallas backward)
   and cascade-level ``acdc_cascade_op`` (whole-cascade forward fusion,

@@ -1,0 +1,167 @@
+"""First-call on-device block-size autotuning for the fused ACDC kernels.
+
+The fused kernels used fixed row blocks (``bm`` = 256 forward / 128
+backward, budget-derived for the cascade).  The VMEM-occupancy sweet spot
+shifts with N, cascade depth, dtype and TPU generation, so on the first
+call for a given ``(N, K, dtype, direction)`` this module times a tiny
+on-device sweep over the candidate blocks {64, 128, 256} and memoizes the
+winner for the process lifetime.  Off-device (CPU tests / CI, where the
+kernels run in interpret mode and timings are meaningless) the sweep is
+skipped and the previous fixed constants come back unchanged, so tuned
+and untuned runs share one code path.
+
+The call sites (``ops.py``'s custom-VJP impls) are almost always first
+hit INSIDE a ``jit`` trace, where omnistaging would stage the sweep's
+work as tracers instead of running it.  The sweep therefore escapes the
+trace explicitly: sample operands are built concrete under
+``jax.ensure_compile_time_eval()`` and each candidate kernel is
+dispatched through an AOT ``lower(...).compile()`` executable (compiled
+callables run for real whatever the ambient trace state), so the timing
+happens on device at trace time and only the chosen ``bm`` (a static
+Python int) shapes the traced kernel.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms
+from repro.kernels import acdc_bwd as bwd_mod
+from repro.kernels import acdc_cascade_fused as cascade_mod
+from repro.kernels import acdc_fused as fused_mod
+
+#: candidate row blocks, smallest first (the sweep skips ones over budget)
+CANDIDATE_BMS = (64, 128, 256)
+#: rows in the sweep's sample batch — enough grid steps to see pipelining
+SWEEP_ROWS = 1024
+#: timing repetitions per candidate (after one compile/warmup call)
+SWEEP_REPS = 3
+
+_CACHE: Dict[Tuple, int] = {}
+
+
+def _fallback(direction: str, n: int, k: int, *, bias: bool,
+              permute: bool) -> int:
+    """The pre-autotune fixed constants (also the no-device answer)."""
+    if direction == "fwd":
+        return fused_mod.DEFAULT_BM
+    if direction == "bwd":
+        return bwd_mod.DEFAULT_BM
+    if direction == "cascade":
+        bm = cascade_mod.pick_bm(n, k, permute=permute, bias=bias)
+        return bm if bm is not None else cascade_mod.DEFAULT_BM
+    raise ValueError(f"unknown direction {direction!r}")
+
+
+def _candidates(direction: str, n: int, k: int, *, bias: bool,
+                permute: bool):
+    if direction != "cascade":
+        return list(CANDIDATE_BMS)
+    return [bm for bm in CANDIDATE_BMS
+            if cascade_mod.cascade_vmem_bytes(
+                n, k, permute=permute, bias=bias,
+                bm=bm) <= cascade_mod.VMEM_BUDGET]
+
+
+def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
+                 permute: bool,
+                 interpret: bool) -> Callable[[int], Callable[[], None]]:
+    """Build ``build(bm) -> run()``: an AOT-compiled single kernel call on
+    sample operands.  Compilation happens in ``build`` (outside the timed
+    region); ``run`` only dispatches and blocks.  Operands are created
+    under ``ensure_compile_time_eval`` and the call goes through
+    ``lower(...).compile()`` so both stay concrete when the sweep is
+    first hit inside an enclosing ``jit`` trace."""
+    with jax.ensure_compile_time_eval():
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (SWEEP_ROWS, n), dtype)
+        c = transforms.dct_matrix(n, dtype=jnp.float32)
+        ct = transforms.idct_matrix(n, dtype=jnp.float32)
+        if direction == "cascade":
+            a = jnp.ones((k, n), jnp.float32)
+            d = jnp.ones((k, n), jnp.float32)
+            b = jnp.zeros((k, n), jnp.float32) if bias else None
+            ct_mid = (ct[:, transforms.make_riffle(n)] if permute else None)
+        else:
+            a = jnp.ones((n,), jnp.float32)
+            d = jnp.ones((n,), jnp.float32)
+            b = jnp.zeros((n,), jnp.float32) if bias else None
+            g = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (SWEEP_ROWS, n), dtype)
+
+    def build(bm: int) -> Callable[[], None]:
+        if direction == "cascade":
+            args = (x, a, d, b, c, ct, ct_mid)
+            compiled = cascade_mod.acdc_cascade_pallas.lower(
+                *args, relu=False, bm=bm, interpret=interpret).compile()
+        elif direction == "fwd":
+            args = (x, a, d, b, c, ct)
+            compiled = fused_mod.acdc_fused_pallas.lower(
+                *args, bm=bm, interpret=interpret).compile()
+        else:
+            args = (x, g, a, d, c, ct)
+            compiled = bwd_mod.acdc_bwd_pallas.lower(
+                *args, with_bias=bias, bm=bm, interpret=interpret).compile()
+
+        def run() -> None:
+            jax.block_until_ready(compiled(*args))
+
+        run.bm = bm
+        return run
+
+    return build
+
+
+def sweep(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
+          bias: bool = False, permute: bool = False,
+          interpret: bool = False,
+          timer: Optional[Callable[[Callable[[], None]], float]] = None) -> int:
+    """Time every in-budget candidate and return the fastest ``bm``.
+
+    ``timer`` (seconds for one call of a nullary thunk) is injectable for
+    tests; the default runs one warmup/compile call then best-of-
+    ``SWEEP_REPS`` wall clock.
+    """
+    cands = _candidates(direction, n, k, bias=bias, permute=permute)
+    if not cands:
+        return _fallback(direction, n, k, bias=bias, permute=permute)
+    build = _make_runner(direction, n, k, dtype, bias=bias, permute=permute,
+                         interpret=interpret)
+
+    def default_timer(thunk: Callable[[], None]) -> float:
+        thunk()  # warmup outside the timed reps (compile already done)
+        best = float("inf")
+        for _ in range(SWEEP_REPS):
+            t0 = time.perf_counter()
+            thunk()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    timer = timer or default_timer
+    timings = [(timer(build(bm)), bm) for bm in cands]
+    return min(timings)[1]
+
+
+def autotuned_bm(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
+                 bias: bool = False, permute: bool = False) -> int:
+    """Memoized block size for ``(N, K, dtype, direction)`` (+ the budget
+    knobs bias/permute): on-device sweep on TPU, fixed fallback elsewhere.
+    """
+    key = (direction, int(n), int(k), jnp.dtype(dtype).name, bool(bias),
+           bool(permute))
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    if jax.default_backend() != "tpu":
+        bm = _fallback(direction, n, k, bias=bias, permute=permute)
+    else:
+        try:
+            bm = sweep(direction, n, k, dtype, bias=bias, permute=permute)
+        except Exception:
+            bm = _fallback(direction, n, k, bias=bias, permute=permute)
+    _CACHE[key] = bm
+    return bm

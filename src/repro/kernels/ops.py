@@ -43,6 +43,7 @@ from repro.core import transforms
 from repro.kernels import acdc_bwd as bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import autotune
 from repro.kernels import scaled_matmul as smm_mod
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -57,7 +58,9 @@ def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
     c = transforms.dct_matrix(n, dtype=jnp.float32)
     ct = transforms.idct_matrix(n, dtype=jnp.float32)
     if n <= fused_mod.MAX_FUSED_N:
-        return fused_mod.acdc_fused_pallas(x2, a, d, bias, c, ct,
+        bm = autotune.autotuned_bm("fwd", n, dtype=x2.dtype,
+                                   bias=bias is not None)
+        return fused_mod.acdc_fused_pallas(x2, a, d, bias, c, ct, bm=bm,
                                            interpret=interpret)
     # Two-call path: h2 lands in HBM exactly once.  A and D are fused as
     # pre-scales; the bias-on-D commutes through the final matmul as
@@ -78,8 +81,9 @@ def _acdc_bwd_impl(x2, a, d, g2, *, with_bias=True, interpret):
     c = transforms.dct_matrix(n, dtype=jnp.float32)
     ct = transforms.idct_matrix(n, dtype=jnp.float32)
     if n <= fused_mod.MAX_FUSED_N:
+        bm = autotune.autotuned_bm("bwd", n, dtype=x2.dtype, bias=with_bias)
         return bwd_mod.acdc_bwd_pallas(x2, g2, a, d, c, ct,
-                                       with_bias=with_bias,
+                                       with_bias=with_bias, bm=bm,
                                        interpret=interpret)
     return bwd_mod.acdc_bwd_two_call(x2, g2, a, d, c, ct,
                                      with_bias=with_bias,
@@ -167,10 +171,11 @@ def _cascade_fwd_impl(x2, a, d, bias, relu, permute, *, interpret):
         # (z @ C^T)[:, p] == z @ C^T[:, p] — no in-kernel gather.
         perm = transforms.make_riffle(n)
         ct_mid = ct[:, perm]
-    # Row block sized to the VMEM left over by the transform matrices;
-    # the dispatcher guaranteed some block fits before routing here.
-    bm = cascade_mod.pick_bm(n, a.shape[0], permute=permute,
-                             bias=bias is not None)
+    # Row block autotuned within the VMEM budget left by the transform
+    # matrices (fixed pick_bm answer off-device); the dispatcher
+    # guaranteed some block fits before routing here.
+    bm = autotune.autotuned_bm("cascade", n, a.shape[0], x2.dtype,
+                               bias=bias is not None, permute=permute)
     return cascade_mod.acdc_cascade_pallas(x2, a, d, bias, c, ct, ct_mid,
                                            relu=relu, bm=bm,
                                            interpret=interpret)

@@ -11,6 +11,11 @@ batched prefill + lockstep decode (no continuous batching) for A/B runs.
 ``--paged --block-size 16 [--blocks N]`` serves from the paged block KV
 cache: all slots draw pages from one global pool sized for the traffic
 mix instead of each reserving a dense ``max_len`` slab.
+``--spec [--spec-k 4] [--draft-depth K/2] [--spec-skip-layers J]`` turns
+on speculative decoding: the target's own truncated ACDC cascades draft
+``spec-k`` tokens per tick and one verify program scores them all, so
+each slot advances by its accepted length per target dispatch (greedy
+streams are bit-identical to the non-speculative engine).
 """
 
 from __future__ import annotations
@@ -82,7 +87,14 @@ def run_engine(model, cfg, params, args, rng):
                  max_prompt_len=args.prompt_len, sample=args.sample,
                  temperature=args.temperature, top_k=args.top_k,
                  top_p=args.top_p, paged=args.paged,
-                 block_size=args.block_size, n_blocks=args.blocks)
+                 block_size=args.block_size, n_blocks=args.blocks,
+                 spec_k=args.spec_k if args.spec else 0,
+                 draft_depth=args.draft_depth,
+                 draft_skip_layers=args.spec_skip_layers)
+    if args.spec:
+        print(f"[spec] k={eng.spec_k} draft={type(eng.draft).__name__} "
+              f"depth={getattr(eng.draft, 'depth', '-')} "
+              f"skip_layers={getattr(eng.draft, 'skip_layers', 0)}")
     if args.paged:
         print(f"[paged] block_size={eng.block_size} "
               f"pool={eng.allocator.n_blocks} blocks "
@@ -109,6 +121,13 @@ def run_engine(model, cfg, params, args, rng):
               f"{eng.allocator.n_blocks} blocks in use | "
               f"{eng.stats['stalled_slot_ticks']} stalled slot-ticks | "
               f"{eng.stats['preempted']} preempted")
+    if args.spec:
+        print(f"[spec] {eng.stats['accepted']}/{eng.stats['drafted']} "
+              f"drafts accepted (rate "
+              f"{eng.stats['acceptance_rate']:.3f}) | "
+              f"{eng.stats['decode_ticks']} verify dispatches for "
+              f"{toks} tokens "
+              f"({toks / max(eng.stats['decode_ticks'], 1):.2f} tok/dispatch)")
     print(f"[engine] ttft p50 {np.median(ttft):.3f}s max {max(ttft):.3f}s")
     print("sample generations (token ids):")
     for r in reqs[:2]:
@@ -143,9 +162,22 @@ def main(argv=None):
     ap.add_argument("--blocks", type=int, default=None,
                     help="pool size in pages; default = dense parity "
                          "(slots * ceil(max_len / block_size))")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding: truncated-cascade "
+                         "self-draft + one batched k-token verify per tick")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative tick")
+    ap.add_argument("--draft-depth", type=int, default=None,
+                    help="cascade layers the draft keeps "
+                         "(default sell_k // 2)")
+    ap.add_argument("--spec-skip-layers", type=int, default=0,
+                    help="also drop this many top transformer blocks "
+                         "from the draft (decoder families)")
     args = ap.parse_args(argv)
     if args.paged and args.static:
         ap.error("--paged applies to the engine path, not --static")
+    if args.spec and args.static:
+        ap.error("--spec applies to the engine path, not --static")
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))

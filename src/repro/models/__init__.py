@@ -13,9 +13,18 @@
                                              -> paged decode cache
     model.decode_step_paged(params, cache, t, pos, tables, cfg)
                                              -> (logits, cache)
+    model.verify_step(params, cache, toks (B,T), pos, cfg)
+                                             -> (logits (B,T,V), cache,
+                                                 states | None)
+    model.verify_step_paged(params, cache, toks, pos, tables, cfg)
+                                             -> same, paged KV
 
 The paged pair is None for families with no length-proportional KV to
-page (mamba2's recurrent state is O(1) per slot by construction).
+page (mamba2's recurrent state is O(1) per slot by construction); the
+verify pair is the speculative-decoding append-and-score path (KV leaves
+set-written so rollback is a position rewind; ``states`` carries
+per-position snapshots of the ``recurrent_keys`` cache leaves, which
+cannot rewind and are re-committed at the accepted length instead).
 """
 
 from __future__ import annotations
@@ -37,6 +46,10 @@ class Model:
     prefill: Optional[Callable] = None
     init_cache_paged: Optional[Callable] = None
     decode_step_paged: Optional[Callable] = None
+    verify_step: Optional[Callable] = None
+    verify_step_paged: Optional[Callable] = None
+    #: cache keys whose state is truly recurrent (snapshot-rollback)
+    recurrent_keys: tuple = ()
     module: Any = None
 
 
@@ -59,5 +72,8 @@ def get_model(cfg: ModelConfig) -> Model:
         prefill=getattr(mod, "prefill", None),
         init_cache_paged=getattr(mod, "init_cache_paged", None),
         decode_step_paged=getattr(mod, "decode_step_paged", None),
+        verify_step=getattr(mod, "verify_step", None),
+        verify_step_paged=getattr(mod, "verify_step_paged", None),
+        recurrent_keys=tuple(getattr(mod, "RECURRENT_CACHE_KEYS", ())),
         module=mod,
     )

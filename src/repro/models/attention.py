@@ -318,6 +318,94 @@ def attention_decode_paged(
     return out, k_pages, v_pages
 
 
+def attention_verify(
+    params: dict,
+    x: jax.Array,                   # (B, T, D) — pending token + k drafts
+    cache_k: jax.Array,             # (B, Smax, Hkv, Dh) — this layer's slice
+    cache_v: jax.Array,
+    position: jax.Array,            # (B,) first write index per row
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Append-and-score T tokens against the dense cache in one pass.
+
+    The speculative-decode verify primitive: row ``b``'s tokens occupy
+    positions ``position[b] .. position[b] + T - 1``.  K/V is written with
+    ``set`` (NOT the additive decode scatter), so a later rollback is just
+    a position rewind — stale values beyond the new frontier sit past the
+    causal mask and are overwritten exactly by the next set-write.  Rows
+    whose position is parked (at/beyond ``Smax``) write nothing (the
+    scatter drops out-of-bounds indices).  Per position the math matches
+    :func:`attention_decode` reduction-for-reduction, so greedy argmax
+    agreement with token-at-a-time decode is exact.
+    """
+    b, t, _ = x.shape
+    smax = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos = position[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B,T)
+    q = apply_rope(q, pos, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_fraction, cfg.rope_theta)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]                     # (B,1)
+    cache_k = cache_k.at[bidx, pos].set(k.astype(cache_k.dtype), mode="drop")
+    cache_v = cache_v.at[bidx, pos].set(v.astype(cache_v.dtype), mode="drop")
+    k_pos = jnp.arange(smax, dtype=jnp.int32)[None, :]                 # (1,Smax)
+    mask = causal_window_mask(pos, k_pos, window)                      # (B,T,Smax)
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(b, t, cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, cache_k, cache_v
+
+
+def attention_verify_paged(
+    params: dict,
+    x: jax.Array,                   # (B, T, D)
+    k_pages: jax.Array,             # (NB+1, bs, Hkv, Dh) — this layer's pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,        # (B, MB) int32, -1 = unmapped
+    position: jax.Array,            # (B,) first write index per row
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged twin of :func:`attention_verify`.
+
+    Each of the T tokens' K/V is set-scattered through the block table
+    (the engine pre-maps pages for the whole verify window, or parks the
+    row); unmapped or parked positions route to the trash page.  Rollback
+    is a position rewind plus returning over-mapped tail pages — page
+    contents are never cleaned, exactly like the single-token decode path.
+    """
+    b, t, _ = x.shape
+    n_pages, bs = k_pages.shape[0], k_pages.shape[1]
+    mb = block_tables.shape[1]
+    virtual = mb * bs
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos = position[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B,T)
+    q = apply_rope(q, pos, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_fraction, cfg.rope_theta)
+
+    blk_idx = jnp.minimum(pos // bs, mb - 1)                           # (B,T)
+    phys = jnp.take_along_axis(block_tables, blk_idx, axis=1)          # (B,T)
+    writable = jnp.logical_and(phys >= 0, pos < virtual)
+    phys = jnp.where(writable, phys, n_pages - 1)                      # sink
+    off = pos % bs
+    k_pages = k_pages.at[phys, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v.astype(v_pages.dtype))
+
+    tbl = jnp.where(block_tables >= 0, block_tables, 0)                # (B,MB)
+    ck = k_pages[tbl].reshape(b, virtual, *k_pages.shape[2:])
+    cv = v_pages[tbl].reshape(b, virtual, *v_pages.shape[2:])
+    k_pos = jnp.arange(virtual, dtype=jnp.int32)[None, :]
+    mask = causal_window_mask(pos, k_pos, window)                      # (B,T,V)
+    out = _sdpa(q, ck, cv, mask, cfg)
+    dh = cfg.head_dim_
+    out = out.reshape(b, t, cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, k_pages, v_pages
+
+
 def attention_decode(
     params: dict,
     x: jax.Array,                   # (B, 1, D)

@@ -75,6 +75,7 @@ class ModelConfig:
     sell_targets: Tuple[str, ...] = ("attn_out", "mlp", "ssm", "shared_in")
     sell_relu: bool = False
     sell_permute: bool = True
+    sell_init_std: float = 0.061     # paper section 6.2 identity+noise scale
     sell_rank: int = 64              # for the low_rank baseline
     sell_method: str = "auto"        # transform backend: auto|fft|matmul|pallas
     # pin SELL activations to batch-only sharding (feature axis local) so

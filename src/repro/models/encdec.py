@@ -227,15 +227,7 @@ def prefill(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig,
         x = x + out
         # cross-attention against the precomputed encoder KV
         h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
-        q = attn_mod.linear.linear_apply(
-            layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
-            cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
-        out = attn_mod._sdpa(q, xk, xv, None, cfg)
-        out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
-        out = attn_mod.linear.linear_apply(
-            layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
-            cfg, "attn_out")
-        x = x + out
+        x = x + _cross_attend(layer, h, xk, xv, cfg)
         h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
         x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
         ck, cv = attn_mod.scatter_prefill_kv(k, v, lengths, smax)
@@ -265,16 +257,7 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
         x = x + out
         # cross-attention against the precomputed encoder KV
         h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
-        dh = cfg.head_dim_
-        q = attn_mod.linear.linear_apply(
-            layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
-            cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
-        out = attn_mod._sdpa(q, xk, xv, None, cfg)
-        out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
-        out = attn_mod.linear.linear_apply(
-            layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
-            cfg, "attn_out")
-        x = x + out
+        x = x + _cross_attend(layer, h, xk, xv, cfg)
         h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
         x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
         return x, (ck, cv)
@@ -286,6 +269,92 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
     return logits, {**cache, "k": nk, "v": nv}
+
+
+def _cross_attend(layer: dict, h: jax.Array, xk: jax.Array, xv: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Cross-attention of (B, T, D) queries over the precomputed encoder
+    KV — shared by the decode, verify and prefill bodies (T = 1, k+1, S)."""
+    dh = cfg.head_dim_
+    q = attn_mod.linear.linear_apply(
+        layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
+        cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
+    out = attn_mod._sdpa(q, xk, xv, None, cfg)
+    out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
+    return attn_mod.linear.linear_apply(
+        layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
+        cfg, "attn_out")
+
+
+def verify_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T) pending token + k draft tokens
+    position: jax.Array,      # (B,) first write position per row
+    cfg: ModelConfig,
+):
+    """Speculative append-and-score (see transformer.verify_step): decoder
+    self-attention KV set-written at ``position + i``, cross KV read-only."""
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+    window = jnp.zeros((), jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        layer, ck, cv, xk, xv = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, ck, cv = attn_mod.attention_verify(
+            layer["attn"], h, ck, cv, position, window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
+        x = x + _cross_attend(layer, h, xk, xv, cfg)
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {**cache, "k": nk, "v": nv}, None
+
+
+def verify_step_paged(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T)
+    position: jax.Array,      # (B,)
+    block_tables: jax.Array,  # (B, MB)
+    cfg: ModelConfig,
+):
+    """Paged twin of :func:`verify_step`; cross KV stays dense."""
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)
+    window = jnp.zeros((), jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        layer, kp, vp, xk, xv = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, kp, vp = attn_mod.attention_verify_paged(
+            layer["attn"], h, kp, vp, block_tables, position, window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
+        x = x + _cross_attend(layer, h, xk, xv, cfg)
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (kp, vp)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["k_pages"], cache["v_pages"],
+         cache["xk"], cache["xv"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {**cache, "k_pages": nk, "v_pages": nv}, None
 
 
 def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
@@ -306,16 +375,7 @@ def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
         x = x + out
         # cross-attention against the precomputed encoder KV
         h = rms_norm(x, layer["norm_x"]["scale"], cfg.norm_eps)
-        dh = cfg.head_dim_
-        q = attn_mod.linear.linear_apply(
-            layer["cross"]["wq"], h, cfg.d_model, cfg.n_heads * dh,
-            cfg, "attn_qkv").reshape(*h.shape[:-1], cfg.n_heads, dh)
-        out = attn_mod._sdpa(q, xk, xv, None, cfg)
-        out = out.reshape(*h.shape[:-1], cfg.n_heads * dh)
-        out = attn_mod.linear.linear_apply(
-            layer["cross"]["wo"], out, cfg.n_heads * dh, cfg.d_model,
-            cfg, "attn_out")
-        x = x + out
+        x = x + _cross_attend(layer, h, xk, xv, cfg)
         h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
         x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
         return x, (kp, vp)

@@ -32,6 +32,7 @@ def _sell_cfg(cfg: ModelConfig, n_in: int, n_out: int) -> sell_mod.SellConfig:
         relu=cfg.sell_relu,
         permute=cfg.sell_permute,
         bias=False,  # LM convention: norms carry the biases
+        init_std=cfg.sell_init_std,
         rank=cfg.sell_rank,
         method=cfg.sell_method,  # type: ignore[arg-type]
         lane_multiple=128,

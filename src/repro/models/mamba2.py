@@ -345,6 +345,42 @@ def mamba_block_decode(
     return out, new_state, new_conv_state
 
 
+def mamba_block_verify(
+    params: dict,
+    x: jax.Array,            # (B, T, D)
+    ssm_state: jax.Array,    # (B, H, P, N) fp32
+    conv_state: jax.Array,   # (B, W-1, conv_dim)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Consume T tokens sequentially for speculative-decode verification.
+
+    An inner ``lax.scan`` applies :func:`mamba_block_decode` per position —
+    bit-identical to T single-token decode steps — and keeps EVERY
+    intermediate state: the recurrence cannot rewind like a KV cache, so
+    rollback re-commits the state at the accepted length instead.  Returns
+    ``(y (B,T,D), ssm_steps (B,T+1,H,P,N), conv_steps (B,T+1,W-1,C))``
+    where step index ``j`` is the state after consuming ``j`` tokens
+    (index 0 = the incoming state, so zero-advance rows commit cleanly).
+    """
+
+    def step(carry, xt):
+        ssm, conv = carry
+        out, ssm, conv = mamba_block_decode(params, xt[:, None], ssm, conv,
+                                            cfg)
+        return (ssm, conv), (out[:, 0], ssm, conv)
+
+    _, (ys, ssms, convs) = jax.lax.scan(
+        step, (ssm_state, conv_state), jnp.moveaxis(x, 1, 0),
+        unroll=cfg.scan_unroll)
+    y = jnp.moveaxis(ys, 0, 1)                                  # (B,T,D)
+    ssm_steps = jnp.concatenate(
+        [ssm_state[:, None], jnp.moveaxis(ssms, 0, 1)], axis=1)
+    conv_steps = jnp.concatenate(
+        [conv_state[:, None].astype(convs.dtype),
+         jnp.moveaxis(convs, 0, 1)], axis=1)
+    return y, ssm_steps, conv_steps
+
+
 # ---------------------------------------------------------------------------
 # Full model assembly (decoder of stacked mamba blocks).
 # ---------------------------------------------------------------------------
@@ -395,6 +431,49 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     del max_len  # state is O(1) in sequence length
     return init_ssm_cache(cfg, batch, cfg.n_layers, cfg.compute_dtype)
+
+
+#: cache leaves that are truly recurrent (cannot rewind): speculative
+#: rollback re-commits them at the accepted length via per-step snapshots.
+RECURRENT_CACHE_KEYS = ("ssm", "conv")
+
+
+def verify_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T) pending token + k draft tokens
+    position: jax.Array,      # (B,) unused: recurrent state carries time
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict, dict]:
+    """Speculative append-and-score for the pure-SSM family.
+
+    Returns ``(logits (B,T,V), cache_advanced, states)`` where ``states``
+    stacks per-position recurrent snapshots — ``states[key]`` is
+    ``cache[key]`` with a ``T+1`` time axis inserted after the batch axis
+    (index ``j`` = state after ``j`` consumed tokens).  The caller selects
+    the accepted index; ``cache_advanced`` carries the fully-consumed
+    state for callers (the draft loop) that always advance by T.
+    """
+    del position
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)            # (B,T,D)
+
+    def body(carry, xs):
+        x = carry
+        layer, ssm, conv = xs
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        out, ssm_steps, conv_steps = mamba_block_verify(
+            layer["mixer"], h, ssm, conv, cfg)
+        return x + out, (ssm_steps, conv_steps)
+
+    x, (ssm_steps, conv_steps) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    states = {"ssm": ssm_steps, "conv": conv_steps}             # (L,B,T+1,..)
+    cache = {"ssm": ssm_steps[:, :, -1], "conv": conv_steps[:, :, -1]}
+    return logits, cache, states
 
 
 def decode_step(params: dict, cache: dict, tokens: jax.Array,

@@ -235,6 +235,84 @@ def decode_step(
     return logits, {"k": new_k, "v": new_v}
 
 
+def verify_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T) pending token + k draft tokens
+    position: jax.Array,      # (B,) first write position per row
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict, None]:
+    """Speculative-decode append-and-score: T tokens in ONE lowered pass.
+
+    Returns ``(logits (B, T, V), cache, None)`` — logits at row position
+    ``i`` score the token that follows ``tokens[:, i]``, exactly what
+    ``decode_step`` would emit feeding the same tokens one at a time.  K/V
+    is set-written (:func:`repro.models.attention.attention_verify`), so
+    rejected tail positions roll back by rewinding ``position``; the KV
+    cache needs no state selection (trailing ``None``).
+    """
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)          # (B,T,D)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        x = carry
+        layer, window, ck, cv = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, ck, cv = attn_mod.attention_verify(
+            layer["attn"], h, ck, cv, position, window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        if "moe" in layer:
+            x = x + mlp_mod.moe(layer["moe"], h, cfg)
+        else:
+            x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (ck, cv)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k"], cache["v"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"k": new_k, "v": new_v}, None
+
+
+def verify_step_paged(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T)
+    position: jax.Array,      # (B,)
+    block_tables: jax.Array,  # (B, MB) int32, -1 = unmapped
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict, None]:
+    """Paged twin of :func:`verify_step` (writes through the block table)."""
+    dtype = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dtype)          # (B,T,D)
+    windows = jnp.asarray(cfg.layer_windows())
+
+    def body(carry, xs):
+        x = carry
+        layer, window, kp, vp = xs
+        h = rms_norm(x, layer["norm1"]["scale"], cfg.norm_eps)
+        out, kp, vp = attn_mod.attention_verify_paged(
+            layer["attn"], h, kp, vp, block_tables, position, window, cfg)
+        x = x + out
+        h = rms_norm(x, layer["norm2"]["scale"], cfg.norm_eps)
+        if "moe" in layer:
+            x = x + mlp_mod.moe(layer["moe"], h, cfg)
+        else:
+            x = x + mlp_mod.mlp(layer["mlp"], h, cfg)
+        return x, (kp, vp)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["k_pages"],
+                  cache["v_pages"]),
+        unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"k_pages": new_k, "v_pages": new_v}, None
+
+
 def decode_step_paged(
     params: dict,
     cache: dict,              # {"k_pages", "v_pages"}: (L, NB+1, bs, Hkv, Dh)

@@ -173,6 +173,11 @@ def prefill(params: dict, cache: dict, tokens: jax.Array, cfg: ModelConfig,
 # Decode: mamba states + KV caches for each shared-block application.
 # ---------------------------------------------------------------------------
 
+#: cache leaves that are truly recurrent (cannot rewind): speculative
+#: rollback re-commits them at the accepted length via per-step snapshots,
+#: and the paged decode freezes them on stalled (parked) rows.
+RECURRENT_CACHE_KEYS = ("ssm", "conv")
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     n_apps = len(_n_groups(cfg))
     cache = mamba_mod.init_ssm_cache(cfg, batch, cfg.n_layers, cfg.compute_dtype)
@@ -251,11 +256,118 @@ def decode_step(params: dict, cache: dict, tokens: jax.Array,
     }
 
 
+def _verify_impl(params, cache, tokens, position, cfg, attend):
+    """Shared speculative append-and-score body (dense / paged shared
+    attention differ only in ``attend``).  Returns ``(logits (B,T,V),
+    kv_leaves, states)`` with ``states`` the per-position recurrent
+    snapshots: each leaf is the cache leaf with a ``T+1`` time axis after
+    the batch axis (index j = state after j consumed tokens)."""
+    dtype = cfg.compute_dtype
+    emb = embed_lookup(params["embed"], tokens, dtype)          # (B,T,D)
+    d = cfg.d_model
+
+    def body(carry, xs):
+        x = carry
+        layer, ssm, conv = xs
+        h = rms_norm(x, layer["norm"]["scale"], cfg.norm_eps)
+        out, ssm_steps, conv_steps = mamba_mod.mamba_block_verify(
+            layer["mixer"], h, ssm, conv, cfg)
+        return x + out, (ssm_steps, conv_steps)
+
+    x = emb
+    start = 0
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for app, size in enumerate(_n_groups(cfg)):
+        sl = lambda p: p[start : start + size]
+        group = (jax.tree.map(sl, params["layers"]),
+                 cache["ssm"][start : start + size],
+                 cache["conv"][start : start + size])
+        x, (ssm_steps, conv_steps) = jax.lax.scan(body, x, group,
+                                                  unroll=cfg.scan_unroll)
+        new_ssm.append(ssm_steps)
+        new_conv.append(conv_steps)
+        # shared attention application `app`
+        h = linear.linear_apply(params["shared"]["in_proj"],
+                                jnp.concatenate([x, emb], axis=-1),
+                                2 * d, d, cfg, "shared_in")
+        a = rms_norm(h, params["shared"]["norm1"]["scale"], cfg.norm_eps)
+        out, ck, cv = attend(app, a)
+        h = h + out
+        m = rms_norm(h, params["shared"]["norm2"]["scale"], cfg.norm_eps)
+        h = h + mlp_mod.mlp(params["shared"]["mlp"], m, cfg)
+        x = x + h
+        new_k.append(ck)
+        new_v.append(cv)
+        start += size
+
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    states = {"ssm": jnp.concatenate(new_ssm, axis=0),          # (L,B,T+1,..)
+              "conv": jnp.concatenate(new_conv, axis=0)}
+    return logits, (jnp.stack(new_k, axis=0), jnp.stack(new_v, axis=0)), states
+
+
+def verify_step(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T) pending token + k draft tokens
+    position: jax.Array,      # (B,) first write position per row
+    cfg: ModelConfig,
+):
+    """Speculative append-and-score: shared-attention KV set-written at
+    ``position + i`` (rollback = position rewind), Mamba SSM/conv state
+    snapshotted per position in ``states`` for accepted-length commit."""
+    window = jnp.zeros((), jnp.int32)
+
+    def attend(app, a):
+        return attn_mod.attention_verify(
+            params["shared"]["attn"], a, cache["attn_k"][app],
+            cache["attn_v"][app], position, window, cfg)
+
+    logits, (nk, nv), states = _verify_impl(params, cache, tokens, position,
+                                            cfg, attend)
+    new_cache = {"ssm": states["ssm"][:, :, -1],
+                 "conv": states["conv"][:, :, -1],
+                 "attn_k": nk, "attn_v": nv}
+    return logits, new_cache, states
+
+
+def verify_step_paged(
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,        # (B, T)
+    position: jax.Array,      # (B,)
+    block_tables: jax.Array,  # (B, MB)
+    cfg: ModelConfig,
+):
+    """Paged twin of :func:`verify_step`: shared-attention KV set-scattered
+    through the block table; SSM/conv snapshots identical to dense."""
+    window = jnp.zeros((), jnp.int32)
+
+    def attend(app, a):
+        return attn_mod.attention_verify_paged(
+            params["shared"]["attn"], a, cache["attn_k_pages"][app],
+            cache["attn_v_pages"][app], block_tables, position, window, cfg)
+
+    logits, (nk, nv), states = _verify_impl(params, cache, tokens, position,
+                                            cfg, attend)
+    new_cache = {"ssm": states["ssm"][:, :, -1],
+                 "conv": states["conv"][:, :, -1],
+                 "attn_k_pages": nk, "attn_v_pages": nv}
+    return logits, new_cache, states
+
+
 def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
                       position: jax.Array, block_tables: jax.Array,
                       cfg: ModelConfig):
     """Mirror of :func:`decode_step` with each shared-attention application
-    reading/writing its own paged KV pool; SSM/conv state stays dense."""
+    reading/writing its own paged KV pool; SSM/conv state stays dense.
+
+    Rows parked at/beyond the virtual row length (free slots AND slots the
+    engine stalled because the page pool ran dry) FREEZE their SSM/conv
+    state: a stalled slot's pending token is re-issued once the stall
+    clears, and the recurrence — unlike the KV write, which the table
+    routes to the trash page — would otherwise consume it twice."""
     dtype = cfg.compute_dtype
     emb = embed_lookup(params["embed"], tokens[:, None], dtype)
 
@@ -300,9 +412,13 @@ def decode_step_paged(params: dict, cache: dict, tokens: jax.Array,
 
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(params["embed"], x)[:, 0]
+    bs = cache["attn_k_pages"].shape[2]
+    parked = (position >= block_tables.shape[1] * bs)[None, :]  # (1, B)
+    ssm = jnp.concatenate(new_ssm, axis=0)
+    conv = jnp.concatenate(new_conv, axis=0)
     return logits, {
-        "ssm": jnp.concatenate(new_ssm, axis=0),
-        "conv": jnp.concatenate(new_conv, axis=0),
+        "ssm": jnp.where(parked[..., None, None, None], cache["ssm"], ssm),
+        "conv": jnp.where(parked[..., None, None], cache["conv"], conv),
         "attn_k_pages": jnp.stack(new_k, axis=0),
         "attn_v_pages": jnp.stack(new_v, axis=0),
     }

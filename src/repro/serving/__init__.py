@@ -58,6 +58,12 @@ their (self-attention) KV, zamba2 pages only the shared-attention KV
 (Mamba SSM/conv state is O(1) per slot and stays dense), mamba2 has
 nothing to page by construction.
 
+Admission under paging uses a bounded head-of-line lookahead (scheduler
+``window``, default 4): when the queue head's prompt does not fit the
+free pool, the first of the next ``window`` queued requests that does is
+admitted instead — the head stays at the front and is retried every
+pass, so one large request cannot starve a stream of small ones.
+
 Tick loop
 ---------
 ``tick()`` = admit (0+ prefill dispatches, one per admission) + one fused
@@ -68,13 +74,49 @@ into the prefill program, keeping the count at two).  ``run(requests)``
 ticks until drained, raising once ``max_ticks`` ticks have run without
 draining.
 
+Speculative tick (``spec_k > 0``)
+---------------------------------
+The decode step is replaced by **draft -> verify -> accept/rollback**
+(:mod:`repro.spec`):
+
+1. *draft* — one fused program proposes ``k`` tokens per slot from a
+   cheap draft source (default: the target's own ACDC cascades truncated
+   to ``draft_depth`` layers, the paper's depth result as a free draft);
+2. *verify* — ONE target program (``make_verify_step``) appends all
+   ``k + 1`` tokens per slot (pending + drafts) to the cache as a
+   position-masked mini-prefill, scores every position, accepts the
+   longest draft prefix the target agrees with, and commits;
+3. *accept/rollback* — each slot advances by its accepted length plus
+   one correction/bonus token (variable per slot; shapes stay static,
+   parked rows just write to nowhere).  Rejected tail positions roll
+   back: KV caches are SET-written by the verify scatter, so a rewind of
+   ``positions`` suffices (the stale tail sits beyond the causal mask
+   and the next set-write overwrites it exactly); paged caches also
+   return over-mapped tail pages to the allocator
+   (``BlockAllocator.trim_slot``); recurrent SSM/conv state cannot
+   rewind and is re-committed from per-position snapshots instead.
+
+Invariants: a draft token is accepted under greedy sampling iff it
+equals the target argmax at its position, and the verify logits are
+computed by the same per-position reductions as the decode step — so
+greedy speculative streams are **bit-identical** to the non-speculative
+engine no matter how bad the draft is (the draft only moves the
+acceptance rate, i.e. how many target dispatches each token costs).
+Temperature sampling uses standard rejection sampling, which preserves
+the target distribution exactly.  ``stats["drafted"/"accepted"/
+"acceptance_rate"]`` track draft quality.
+
 Sampling (``sampler.py``) is shared between the fused decode step and the
 admission path: greedy, or temperature with top-k / top-p filtering.
 Decode ticks and admissions draw from disjoint chained ``fold_in``
 streams, so tick counters and request ids can never collide.
 """
 
-from repro.dist.steps import make_prefill_step, make_serve_step  # noqa: F401
+from repro.dist.steps import (  # noqa: F401
+    make_prefill_step,
+    make_serve_step,
+    make_verify_step,
+)
 from repro.serving.blocks import BlockAllocator  # noqa: F401
 from repro.serving.engine import Engine  # noqa: F401
 from repro.serving.request import Request, RequestStatus  # noqa: F401

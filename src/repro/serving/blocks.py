@@ -83,6 +83,14 @@ class BlockAllocator:
     def blocks_held(self, slot: int) -> int:
         return int((self.table[slot] >= 0).sum())
 
+    def _release(self, slot: int, idx: int) -> None:
+        """Unmap table entry ``idx`` of ``slot`` and return its page to
+        the free list (single home for the release bookkeeping)."""
+        blk = int(self.table[slot, idx])
+        self.table[slot, idx] = -1
+        self._held.discard(blk)
+        self._free.append(blk)
+
     # -- allocation --------------------------------------------------------
 
     def _pop(self) -> int:
@@ -111,29 +119,59 @@ class BlockAllocator:
         or beyond the virtual row length are parked writes that the device
         routes to the trash page; they need no mapping.
         """
-        if position >= self.max_blocks_per_slot * self.block_size:
-            return True
-        idx = position // self.block_size
-        if self.table[slot, idx] >= 0:
-            return True
-        if not self._free:
-            return False
-        self.table[slot, idx] = self._pop()
+        return self.ensure_range(slot, position, 1)
+
+    def ensure_range(self, slot: int, start: int, count: int) -> bool:
+        """Map every page covering positions ``[start, start + count)``
+        — the speculative verify window writes ``k + 1`` positions in one
+        program.  All-or-nothing: on a dry pool, pages mapped by THIS call
+        are returned and False comes back (the caller stalls the slot;
+        a partially-mapped window would verify against trash).  Positions
+        beyond the virtual row length are trash-routed and need no map.
+        """
+        newly: List[int] = []
+        for pos in range(start, start + count):
+            if pos >= self.max_blocks_per_slot * self.block_size:
+                break
+            idx = pos // self.block_size
+            if self.table[slot, idx] >= 0:
+                continue
+            if not self._free:
+                for idx2 in newly:
+                    self._release(slot, idx2)
+                return False
+            self.table[slot, idx] = self._pop()
+            newly.append(idx)
         return True
+
+    def trim_slot(self, slot: int, n_tokens: int) -> int:
+        """Return over-mapped tail pages to the pool — speculative-decode
+        rollback: after a verify that mapped ``k + 1`` positions commits
+        only ``n_tokens`` total for the slot, pages beyond the first
+        ``ceil(n_tokens / block_size)`` hold nothing but rejected-tail
+        junk.  Returns the number of pages freed.
+        """
+        keep = self.blocks_for(max(n_tokens, 1))
+        freed = 0
+        for idx in range(keep, self.max_blocks_per_slot):
+            if self.table[slot, idx] < 0:
+                continue
+            self._release(slot, idx)
+            freed += 1
+        return freed
 
     # -- release -----------------------------------------------------------
 
     def free_slot(self, slot: int) -> None:
         row = self.table[slot]
-        blocks = [int(b) for b in row[row >= 0]]
-        if not blocks:
+        idxs = [i for i in range(self.max_blocks_per_slot) if row[i] >= 0]
+        if not idxs:
             raise ValueError(f"slot {slot} holds no blocks (double free?)")
-        for blk in blocks:
+        for idx in idxs:
+            blk = int(row[idx])
             if blk not in self._held:
                 raise ValueError(f"block {blk} double-freed (slot {slot})")
-            self._held.discard(blk)
-            self._free.append(blk)
-        row[:] = -1
+            self._release(slot, idx)
 
     # -- device view -------------------------------------------------------
 

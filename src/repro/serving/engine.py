@@ -34,6 +34,16 @@ greedy output streams stay identical to the dense cache.  If every active
 slot is stalled at once the engine breaks the deadlock by evicting the
 stalled request holding the most pages (``finish_reason="cache_full"``,
 counted in ``stats["preempted"]``).
+
+Speculative mode (``spec_k > 0``) replaces the one-token decode tick with
+draft -> verify -> accept/rollback: a cheap draft source
+(:mod:`repro.spec.draft`, default the target's own truncated ACDC
+cascades) proposes ``spec_k`` tokens per slot in one fused program, ONE
+target verify program scores and commits them
+(:func:`repro.dist.steps.make_verify_step`), and each slot advances by
+its accepted length — variable per slot, shapes static via masking.
+Greedy streams stay bit-identical to the non-speculative engine; see
+:mod:`repro.serving` for the tick contract.
 """
 
 from __future__ import annotations
@@ -70,6 +80,11 @@ class Engine:
         paged: bool = False,
         block_size: int = 16,
         n_blocks: Optional[int] = None,
+        admit_window: int = 4,
+        spec_k: int = 0,
+        draft=None,
+        draft_depth: Optional[int] = None,
+        draft_skip_layers: int = 0,
     ):
         if model.prefill is None or model.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve")
@@ -78,6 +93,8 @@ class Engine:
             raise ValueError(
                 f"family {cfg.family!r} has no paged KV cache (its decode "
                 "state is not length-proportional); serve it dense")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0 (0 disables)")
         self.model = model
         self.cfg = cfg
         self.params = params
@@ -113,7 +130,8 @@ class Engine:
                                             self.max_blocks)
             self.scheduler = Scheduler(
                 n_slots,
-                admit_ok=lambda r: self.allocator.can_admit(r.prompt_len))
+                admit_ok=lambda r: self.allocator.can_admit(r.prompt_len),
+                window=admit_window)
             self._park = self._virtual
             self._cache = model.init_cache_paged(cfg, n_slots, n_blocks,
                                                  block_size)
@@ -141,14 +159,7 @@ class Engine:
             self._decode = jax.jit(steps_mod.make_serve_step(
                 model, cfg, sample=sample, temperature=temperature,
                 top_k=top_k, top_p=top_p), donate_argnums=(1,))
-
-            def insert(cache, slot_cache, slot):
-                return jax.tree.map(
-                    lambda c, s: jax.lax.dynamic_update_slice_in_dim(
-                        c, s.astype(c.dtype), slot, axis=1),
-                    cache, slot_cache)
-
-            self._insert = jax.jit(insert, donate_argnums=(0,))
+            self._insert = steps_mod.make_insert_step()
 
         self._tokens = np.zeros((n_slots,), np.int32)
         self._positions = np.full((n_slots,), self._park, np.int32)
@@ -159,15 +170,45 @@ class Engine:
         self.stats = {"prefill_dispatches": 0, "decode_ticks": 0,
                       "tokens_out": 0, "finished": 0, "preempted": 0,
                       "stalled_slot_ticks": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
+
+        self.spec_k = spec_k
+        self.draft = None
+        if spec_k:
+            vfn = model.verify_step_paged if paged else model.verify_step
+            if vfn is None:
+                raise ValueError(
+                    f"family {cfg.family!r} has no "
+                    f"{'paged ' if paged else ''}speculative verify path")
+            if draft is None:
+                # paper-native default: the target's own cascades truncated
+                # to half depth (sections 3-4 depth result)
+                from repro.spec.draft import TruncatedCascadeDraft
+                depth = (draft_depth if draft_depth is not None
+                         else max(1, cfg.sell_k // 2))
+                draft = TruncatedCascadeDraft(cfg, params, depth=depth,
+                                              skip_layers=draft_skip_layers)
+            self.draft = draft
+            self.draft.prepare(n_slots, self.max_len, spec_k, sample,
+                               temperature, top_k, top_p)
+            self._verify = jax.jit(steps_mod.make_verify_step(
+                model, cfg, sample=sample, temperature=temperature,
+                top_k=top_k, top_p=top_p, paged=paged, park=self._park),
+                donate_argnums=(1,))
 
     # -- accounting --------------------------------------------------------
 
     @property
     def cache_bytes(self) -> int:
         """Bytes held by the decode cache (the dominant serving
-        allocation): dense slabs or the paged pool, whichever is live."""
-        return sum(leaf.nbytes for leaf in jax.tree.leaves(self._cache))
+        allocation): dense slabs or the paged pool, whichever is live —
+        plus the draft's dense slot cache in speculative mode, so the
+        self-draft's memory cost stays visible next to a paged pool."""
+        total = sum(leaf.nbytes for leaf in jax.tree.leaves(self._cache))
+        if self.draft is not None:
+            total += self.draft.cache_bytes
+        return total
 
     def _decode_rng(self, tick: int) -> jax.Array:
         return jax.random.fold_in(self._rng_decode, tick)
@@ -195,8 +236,8 @@ class Engine:
 
     # -- tick loop --------------------------------------------------------
 
-    def tick(self) -> int:
-        """Admit + one fused decode step; returns #active slots advanced."""
+    def _admit_and_map(self) -> None:
+        """Admission pass + (paged) mapping of this tick's write window."""
         if self.paged:
             # one at a time: each admission's block allocation must be
             # visible to the next can_admit capacity check
@@ -205,10 +246,16 @@ class Engine:
                 if not admitted:
                     break
                 self._admit(*admitted[0])
-            self._ensure_blocks()
+            self._ensure_blocks(need=self.spec_k + 1)
         else:
             for slot, req in self.scheduler.admit():
                 self._admit(slot, req)
+
+    def tick(self) -> int:
+        """Admit + one fused decode step; returns #active slots advanced."""
+        if self.spec_k:
+            return self._tick_spec()
+        self._admit_and_map()
         active = self.scheduler.active()
         if active:
             rng = self._decode_rng(self.stats["decode_ticks"])
@@ -238,6 +285,80 @@ class Engine:
                 self._positions[slot] += 1
                 self._tokens[slot] = t
                 self._maybe_finish(slot, req, t, now)
+        return len(active)
+
+    def _tick_spec(self) -> int:
+        """One speculative tick: draft k, verify once, advance each slot
+        by its accepted length, roll back the rest."""
+        k = self.spec_k
+        self._admit_and_map()
+        active = self.scheduler.active()
+        if not active:
+            return 0
+        tick_rng = self._decode_rng(self.stats["decode_ticks"])
+        draft_rng = jax.random.fold_in(tick_rng, 0)
+        verify_rng = jax.random.fold_in(tick_rng, 1)
+        pos = self._positions.copy()
+        for slot in self._stalled:
+            pos[slot] = self._park  # no writes, no tokens this tick
+
+        t0 = time.perf_counter()
+        drafts, draft_logits = self.draft.propose(self._tokens, pos,
+                                                  draft_rng)
+        tok_mat = np.concatenate([self._tokens[:, None], drafts],
+                                 axis=1).astype(np.int32)
+        if self.paged:
+            acc, out, self._cache = self._verify(
+                self.params, self._cache, jnp.asarray(tok_mat),
+                jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
+                jnp.asarray(self.allocator.table), verify_rng)
+        else:
+            acc, out, self._cache = self._verify(
+                self.params, self._cache, jnp.asarray(tok_mat),
+                jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
+                verify_rng)
+        acc_np = np.asarray(acc)
+        out_np = np.asarray(out)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_ticks"] += 1
+        self.stats["stalled_slot_ticks"] += len(self._stalled)
+
+        now = time.time()
+        n_adv = np.zeros((self.n_slots,), np.int32)
+        for slot, req in active:
+            if slot in self._stalled:
+                continue
+            n = int(acc_np[slot])
+            self.stats["drafted"] += k
+            self.stats["accepted"] += n
+            # commit the accepted drafts plus the correction/bonus token,
+            # applying the per-token stop rules in stream order so EOS /
+            # budget / ceiling cut the stream exactly where the
+            # non-speculative engine would
+            for i in range(n + 1):
+                t = int(out_np[slot, i])
+                req.generated.append(t)
+                self.stats["tokens_out"] += 1
+                self._positions[slot] += 1
+                self._tokens[slot] = t
+                n_adv[slot] += 1
+                self._maybe_finish(slot, req, t, now)
+                if req.done:
+                    break
+        if self.stats["drafted"]:
+            self.stats["acceptance_rate"] = (self.stats["accepted"]
+                                             / self.stats["drafted"])
+        self.draft.commit(n_adv)
+        if self.paged:
+            # rollback: return verify-window pages beyond each surviving
+            # slot's committed frontier (finished slots already freed all).
+            # +1 keeps the page the NEXT tick writes first: releasing it on
+            # a page-boundary frontier would let the admission pass snatch
+            # it back and spuriously stall (or even preempt) this slot.
+            for slot, req in active:
+                if not req.done and slot not in self._stalled:
+                    self.allocator.trim_slot(
+                        slot, int(self._positions[slot]) + 1)
         return len(active)
 
     def run(self, requests: Sequence[Request],
@@ -276,6 +397,10 @@ class Engine:
             self._cache = self._insert(self._cache, slot_cache,
                                        jnp.int32(slot))
         tok = int(self._sample(self._admit_rng(req.rid), last_logits)[0])
+        if self.draft is not None:
+            # the draft mirrors the slot layout: its own (cheap) prefill
+            # fills its cache row so drafting starts from the same prompt
+            self.draft.prefill(slot, jnp.asarray(toks), lengths, fe)
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_dispatches"] += 1
         req.t_first_token = time.time()
@@ -285,14 +410,16 @@ class Engine:
         self._positions[slot] = req.prompt_len
         self._maybe_finish(slot, req, tok, req.t_first_token)
 
-    def _ensure_blocks(self) -> None:
-        """Map each active slot's next write page; stall slots the pool
-        cannot serve, and break an all-stalled deadlock by evicting the
-        stalled request holding the most pages."""
+    def _ensure_blocks(self, need: int = 1) -> None:
+        """Map each active slot's write window (``need`` positions from its
+        frontier — 1 per decode tick, k+1 per speculative tick); stall
+        slots the pool cannot serve, and break an all-stalled deadlock by
+        evicting the stalled request holding the most pages."""
         self._stalled = set()
         active = self.scheduler.active()
         for slot, _ in active:
-            if not self.allocator.ensure(slot, int(self._positions[slot])):
+            if not self.allocator.ensure_range(
+                    slot, int(self._positions[slot]), need):
                 self._stalled.add(slot)
         if self._stalled and len(self._stalled) == len(active):
             slot, req = max(active,
@@ -301,7 +428,8 @@ class Engine:
             self.stats["preempted"] += 1
             self._stalled.discard(slot)
             for slot2 in sorted(self._stalled):
-                if self.allocator.ensure(slot2, int(self._positions[slot2])):
+                if self.allocator.ensure_range(
+                        slot2, int(self._positions[slot2]), need):
                     self._stalled.discard(slot2)
 
     def _maybe_finish(self, slot: int, req: Request, last_token: int,

@@ -9,10 +9,20 @@ arrival stream the batch stays full — the whole point of continuous over
 static batching: no slot idles while a long request drains.
 
 With a paged KV cache the engine passes ``admit_ok`` (an allocator
-capacity check): the queue head is only admitted when enough free blocks
-exist for its prompt plus the first decode token.  Admission stays strict
-FIFO — a blocked head blocks the queue rather than letting shorter
-requests starve it.
+capacity check).  A capacity-blocked queue head no longer blocks the whole
+queue: admission looks at the first ``window`` queued requests (default 4)
+and admits the FIRST one whose prompt fits the free pool, so one large
+request waiting for pages cannot head-of-line-starve a stream of small
+ones.  Queue order is otherwise preserved — the skipped head stays at the
+front and is retried on every admission pass — and ``window=1`` restores
+strict FIFO.
+
+Known trade-off: the lookahead has no aging or page reservation, so on a
+saturated pool where small requests keep arriving and fitting, a large
+head's wait is unbounded (strict FIFO bounded it by blocking everyone
+instead).  Reserving freed pages for a long-blocked head is a ROADMAP
+follow-on; ``window=1`` is the escape hatch when head latency matters
+more than pool utilization.
 """
 
 from __future__ import annotations
@@ -25,11 +35,15 @@ from repro.serving.request import Request, RequestStatus
 
 class Scheduler:
     def __init__(self, n_slots: int,
-                 admit_ok: Optional[Callable[[Request], bool]] = None):
+                 admit_ok: Optional[Callable[[Request], bool]] = None,
+                 window: int = 4):
         if n_slots < 1:
             raise ValueError("need at least one slot")
+        if window < 1:
+            raise ValueError("need a lookahead window of at least 1")
         self.n_slots = n_slots
         self._admit_ok = admit_ok
+        self.window = window
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
 
@@ -45,8 +59,22 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
+    def _pick(self) -> Optional[Request]:
+        """First of the next ``window`` queued requests that passes
+        ``admit_ok`` (bounded head-of-line lookahead), popped from the
+        queue; FIFO order of the rest is untouched."""
+        if self._admit_ok is None:
+            return self.queue.popleft()
+        for i in range(min(self.window, len(self.queue))):
+            if self._admit_ok(self.queue[i]):
+                req = self.queue[i]
+                del self.queue[i]
+                return req
+        return None
+
     def admit(self, limit: Optional[int] = None) -> List[Tuple[int, Request]]:
-        """Fill free slots from the queue (FIFO); returns admissions.
+        """Fill free slots from the queue (FIFO with a bounded capacity
+        lookahead); returns admissions.
 
         ``limit`` caps the number of admissions per call — the paged
         engine admits one at a time so each admission's block allocation
@@ -58,9 +86,9 @@ class Scheduler:
                 break
             if limit is not None and len(out) >= limit:
                 break
-            if self._admit_ok is not None and not self._admit_ok(self.queue[0]):
-                break  # FIFO: a capacity-blocked head is not skipped
-            req = self.queue.popleft()
+            req = self._pick()
+            if req is None:
+                break  # nothing in the window fits the pool
             req.status = RequestStatus.ACTIVE
             req.slot = slot
             self.slots[slot] = req

@@ -1,0 +1,38 @@
+"""Speculative decoding: truncated-cascade self-drafting + batched verify.
+
+ACDC makes the projections nearly free, so serving decode is tick-loop- and
+attention-bound: the engine still pays one full model dispatch per token per
+slot.  Speculative decoding amortizes that dispatch over several tokens —
+a cheap *draft* proposes ``k`` tokens, the target model scores all of them
+in ONE append-and-score program (``dist.steps.make_verify_step``), and the
+engine advances each slot by its accepted prefix length.
+
+The paper's own depth result supplies a free draft: deep ACDC cascades
+approximate dense layers layer-by-layer (sections 3-4), so the SAME weights
+with every cascade truncated to its first ``K_draft < K`` layers are a
+cheap, progressively-worse approximation of the target model
+(:class:`~repro.spec.draft.TruncatedCascadeDraft`).  Any smaller registry
+config can draft instead (:class:`~repro.spec.draft.ModelDraft`).
+
+Correctness contract (pinned by tests/test_spec_decode.py):
+
+* **greedy** — a draft token is accepted iff it equals the target argmax
+  at its position, so the committed stream is bit-identical to the
+  non-speculative engine no matter how bad the draft is;
+* **temperature** — standard rejection sampling (accept ``d_i`` with
+  probability ``min(1, p(d_i)/q(d_i))``, resample the first rejection from
+  ``norm(max(p - q, 0))``, bonus token from ``p``), which preserves the
+  target sampling distribution exactly;
+* **rollback** — rejected positions rewind: KV caches are set-written so a
+  position rewind suffices (dense) plus returning over-mapped tail pages
+  to the allocator (paged); recurrent SSM/conv state cannot rewind and is
+  re-committed from per-position snapshots at the accepted length.
+"""
+
+from repro.spec.draft import DraftSource, ModelDraft, TruncatedCascadeDraft  # noqa: F401
+from repro.spec.verify import (  # noqa: F401
+    commit_states,
+    committed_tokens,
+    greedy_accept,
+    rejection_accept,
+)

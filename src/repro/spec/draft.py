@@ -1,0 +1,246 @@
+"""Draft sources: who proposes the k tokens the target model verifies.
+
+Two sources behind one protocol (:class:`DraftSource`):
+
+* :class:`TruncatedCascadeDraft` — the paper-native self-draft: the SAME
+  target parameters with every stacked ACDC/AFDF cascade sliced to its
+  first ``depth < K`` layers (the depth result of sections 3-4: each extra
+  cascade layer refines an approximation of the dense projection, so the
+  truncated model is a cheap, progressively-worse approximation of the
+  target).  Optionally also drops the top ``skip_layers`` transformer
+  blocks.  NOTE: riffled cascades (``sell_permute=True``) truncate poorly —
+  the dropped tail composes near-identity layers WITH their interleaved
+  permutations, so the truncated output is roughly a permuted version of
+  the target's; draft un-riffled cascades or use :class:`ModelDraft`.
+* :class:`ModelDraft` — any registry/smoke config with the same vocab as
+  the target (fresh or supplied params).
+
+Engine-side contract: the draft owns a DENSE slot cache mirroring the
+engine's slot layout.  Admission prefills it; each spec tick runs ONE
+fused propose program (a ``lax.scan`` of k+1 single-token append-scores:
+k sampled drafts plus one advance step so the draft's own cache covers a
+fully-accepted run); after verification the engine reports how many tokens
+each slot actually committed and the draft rolls back — KV implicitly via
+the engine's position rewind (the propose steps set-write), recurrent
+SSM/conv state by re-committing the per-step snapshot at that length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import steps as steps_mod
+from repro.models import get_model
+from repro.models.common import ModelConfig
+from repro.serving import sampler as sampler_mod
+
+#: SELL kinds with a stacked depth axis to truncate ((..., K, N) leaves).
+CASCADE_KINDS = ("acdc", "afdf")
+
+
+class DraftSource(Protocol):
+    """What the engine needs from a draft."""
+
+    def prepare(self, n_slots: int, max_len: int, k: int, sample: str,
+                temperature: float, top_k: int, top_p: float) -> None: ...
+
+    def prefill(self, slot: int, tokens, lengths, frontend_embeds) -> None: ...
+
+    def propose(self, tokens, positions, rng): ...
+
+    def commit(self, n_adv) -> None: ...
+
+
+def truncate_cascades(params: dict, depth: int) -> dict:
+    """Slice every stacked cascade leaf under a ``sell`` subtree to its
+    first ``depth`` layers.  Cascade leaves are ``(..., K, N)`` whatever
+    the surrounding stacking (per-layer vmapped params add leading axes),
+    so the depth axis is always ``-2``."""
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if key == "sell" and isinstance(val, dict):
+                out[key] = {name: leaf[..., :depth, :]
+                            for name, leaf in val.items()}
+            else:
+                out[key] = walk(val)
+        return out
+
+    return walk(params)
+
+
+class _EngineDraft:
+    """Shared engine-side machinery for any (model, cfg, params) draft."""
+
+    def __init__(self, model, cfg: ModelConfig, params):
+        if model.verify_step is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no verify path to draft with")
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.rec_keys = tuple(model.recurrent_keys)
+        self._rec = None
+
+    # -- engine wiring -----------------------------------------------------
+
+    def prepare(self, n_slots: int, max_len: int, k: int, sample: str,
+                temperature: float, top_k: int, top_p: float) -> None:
+        self.k = k
+        self._cache = self.model.init_cache(self.cfg, n_slots, max_len)
+        self._template = self.model.init_cache(self.cfg, 1, max_len)
+        self._prefill = jax.jit(
+            steps_mod.make_prefill_step(self.model, self.cfg))
+        self._insert = steps_mod.make_insert_step()
+        self._propose = jax.jit(self._make_propose(
+            k, sample, temperature, top_k, top_p), donate_argnums=(1,))
+        self._commit = (jax.jit(self._make_commit(), donate_argnums=(0,))
+                        if self.rec_keys else None)
+
+    def _make_propose(self, k: int, sample: str, temperature: float,
+                      top_k: int, top_p: float):
+        model, cfg, rec_keys = self.model, self.cfg, self.rec_keys
+
+        def step(params, cache, tokens, position, rng):
+            base = {key: cache[key] for key in rec_keys}
+
+            def body(carry, i):
+                tok, cache = carry
+                logits, cache, _ = model.verify_step(
+                    params, cache, tok[:, None], position + i, cfg)
+                lg = logits[:, 0]
+                nxt = sampler_mod.sample(
+                    jax.random.fold_in(rng, i), lg, method=sample,
+                    temperature=temperature, top_k=top_k, top_p=top_p)
+                rec = {key: cache[key] for key in rec_keys}
+                # rejection sampling needs the full draft distribution;
+                # greedy acceptance reads only the tokens, so don't stack
+                # k (B, V) logit planes per tick for nothing
+                ys = (nxt, rec) if sample == "greedy" else (nxt, lg, rec)
+                return (nxt, cache), ys
+
+            # k sampled drafts + ONE advance step feeding the last draft,
+            # so a fully-accepted run leaves no hole at position p + k
+            (_, cache), ys = jax.lax.scan(
+                body, (tokens, cache), jnp.arange(k + 1, dtype=jnp.int32))
+            if sample == "greedy":
+                (toks, recs), dlogits = ys, None
+            else:
+                toks, lgs, recs = ys
+                dlogits = jnp.moveaxis(lgs[:k], 0, 1)            # (B, k, V)
+            drafts = jnp.moveaxis(toks[:k], 0, 1)                # (B, k)
+            rec = {key: jnp.concatenate([base[key][None], recs[key]], axis=0)
+                   for key in rec_keys}                          # (k+2, ...)
+            return drafts, dlogits, rec, cache
+
+        return step
+
+    def _make_commit(self):
+        rec_keys = self.rec_keys
+
+        def commit(cache, rec, n_adv):
+            new = dict(cache)
+            for key in rec_keys:
+                s = rec[key]                                     # (S, L, B, ..)
+                idx = n_adv.reshape((1, 1, -1) + (1,) * (s.ndim - 3))
+                new[key] = jnp.take_along_axis(s, idx,
+                                               axis=0)[0].astype(cache[key].dtype)
+            return new
+
+        return commit
+
+    @property
+    def cache_bytes(self) -> int:
+        """Bytes held by the draft's (dense) slot cache.  NOTE: for a
+        truncated-cascade self-draft this KV geometry equals the target's
+        (truncation shrinks projection params, not heads/layers), so under
+        a paged target it re-adds a dense slab's worth of memory — the
+        engine folds it into its ``cache_bytes`` so the cost is visible;
+        a paged draft cache is a ROADMAP follow-on."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self._cache))
+
+    def prefill(self, slot: int, tokens, lengths, frontend_embeds) -> None:
+        """Admission: run the draft's own prefill into the slot's row."""
+        _, slot_cache = self._prefill(self.params, self._template, tokens,
+                                      lengths, frontend_embeds)
+        self._cache = self._insert(self._cache, slot_cache, jnp.int32(slot))
+
+    def propose(self, tokens, positions, rng):
+        """One fused dispatch: k drafts + draft logits for every slot."""
+        drafts, dlogits, self._rec, self._cache = self._propose(
+            self.params, self._cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(positions, jnp.int32), rng)
+        return np.asarray(drafts), dlogits
+
+    def commit(self, n_adv) -> None:
+        """Roll back to each slot's committed length (KV rolls back
+        implicitly via the engine's position rewind; recurrent state is
+        re-committed from the propose snapshots)."""
+        if self._commit is not None and self._rec is not None:
+            self._cache = self._commit(self._cache, self._rec,
+                                       jnp.asarray(n_adv, jnp.int32))
+        self._rec = None
+
+
+class TruncatedCascadeDraft(_EngineDraft):
+    """Self-draft: target params with each SELL cascade cut to ``depth``."""
+
+    def __init__(self, cfg: ModelConfig, params, depth: int,
+                 skip_layers: int = 0):
+        if cfg.sell_kind in CASCADE_KINDS:
+            if not 1 <= depth <= cfg.sell_k:
+                raise ValueError(
+                    f"draft depth {depth} outside [1, {cfg.sell_k}]")
+            dcfg = dataclasses.replace(cfg, sell_k=depth)
+            dparams = truncate_cascades(params, depth)
+            self.depth = depth
+        elif skip_layers:
+            # no cascades, but dropping top blocks still yields a cheaper
+            # draft; depth is meaningless here
+            dcfg, dparams = cfg, params
+            self.depth = None
+        else:
+            raise ValueError(
+                f"sell_kind {cfg.sell_kind!r} has no stacked cascades to "
+                "truncate and skip_layers=0: the 'draft' would be the FULL "
+                "target model run k+1 extra times per tick (strictly "
+                "slower).  Serve an acdc/afdf SELL model, set skip_layers, "
+                "or pass an explicit draft (e.g. spec.ModelDraft)")
+        if skip_layers:
+            if cfg.family != "decoder":
+                raise ValueError(
+                    "skip_layers only applies to the decoder family")
+            keep = cfg.n_layers - skip_layers
+            if keep < 1:
+                raise ValueError(f"cannot skip {skip_layers} of "
+                                 f"{cfg.n_layers} layers")
+            dcfg = dataclasses.replace(dcfg, n_layers=keep)
+            dparams = {**dparams, "layers": jax.tree.map(
+                lambda p: p[:keep], dparams["layers"])}
+        self.skip_layers = skip_layers
+        super().__init__(get_model(dcfg), dcfg, dparams)
+
+
+class ModelDraft(_EngineDraft):
+    """Draft from any registry/smoke config sharing the target's vocab."""
+
+    def __init__(self, cfg: ModelConfig, params=None,
+                 rng: Optional[jax.Array] = None,
+                 target_cfg: Optional[ModelConfig] = None):
+        if target_cfg is not None and cfg.vocab_size != target_cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {cfg.vocab_size} != target "
+                f"{target_cfg.vocab_size}")
+        model = get_model(cfg)
+        if params is None:
+            params = model.init(rng if rng is not None
+                                else jax.random.PRNGKey(0), cfg)
+        super().__init__(model, cfg, params)

@@ -1,0 +1,107 @@
+"""Acceptance math for speculative decoding (device-side, jit-safe).
+
+Notation: a slot's verify batch feeds ``T = k + 1`` tokens
+``[t_0, d_1 .. d_k]`` (the pending token plus k drafts) and gets back
+target logits ``L_0 .. L_k`` where ``L_i`` scores the token FOLLOWING
+position ``i`` — exactly what ``decode_step`` would emit feeding the same
+tokens one at a time.  Acceptance finds the longest prefix of drafts the
+target agrees with (``n``), and the slot always advances by ``n + 1``
+tokens: the accepted drafts ``d_1 .. d_n`` plus one token sampled from
+``L_n`` (the greedy correction / rejection-resample when ``n < k``, the
+bonus token when ``n == k``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_accept(logits: jax.Array, drafts: jax.Array):
+    """Exact-match acceptance: ``(n_accepted (B,), next_token (B,))``.
+
+    ``logits`` (B, k+1, V), ``drafts`` (B, k).  A draft is accepted iff it
+    equals the target argmax at its position, so the committed stream is
+    bit-identical to non-speculative greedy decode regardless of the draft.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, k+1)
+    match = (greedy[:, :-1] == drafts).astype(jnp.int32)         # (B, k)
+    n = jnp.sum(jnp.cumprod(match, axis=1), axis=1)              # (B,)
+    nxt = jnp.take_along_axis(greedy, n[:, None], axis=1)[:, 0]
+    return n, nxt
+
+
+def rejection_accept(
+    rng: jax.Array,
+    logits: jax.Array,          # (B, k+1, V) target scores
+    draft_logits: jax.Array,    # (B, k, V) draft scores (pre-filter)
+    drafts: jax.Array,          # (B, k) tokens SAMPLED from the draft dist
+    temperature: float = 1.0,
+    top_k: int = 0,
+    top_p: float = 0.0,
+):
+    """Standard speculative rejection sampling (Leviathan et al. 2023).
+
+    Both distributions go through the SAME temperature / top-k / top-p
+    pipeline as :func:`repro.serving.sampler.sample`, so the committed
+    stream is distributed exactly as non-speculative sampling from the
+    target.  Accept ``d_i`` while ``u_i q(d_i) < p(d_i)``; the first
+    rejection resamples from ``norm(max(p - q, 0))``; full acceptance
+    draws the bonus token from ``p`` (expressed uniformly by padding
+    ``q`` with zeros at position k, where the residual reduces to ``p``).
+    """
+    from repro.serving import sampler as sampler_mod  # avoid import cycle
+
+    def dist(lg):
+        lf = lg.astype(jnp.float32) / max(temperature, 1e-6)
+        lf = sampler_mod.apply_top_k(lf, top_k)
+        lf = sampler_mod.apply_top_p(lf, top_p)
+        return jax.nn.softmax(lf, axis=-1)
+
+    b, k = drafts.shape
+    p = dist(logits)                                             # (B,k+1,V)
+    q = dist(draft_logits)                                       # (B,k,V)
+    p_tok = jnp.take_along_axis(p[:, :k], drafts[..., None], axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+    u_key, s_key = jax.random.split(rng)
+    u = jax.random.uniform(u_key, (b, k))
+    accept = (u * q_tok < p_tok).astype(jnp.int32)               # (B,k)
+    n = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)             # (B,)
+
+    q_pad = jnp.concatenate([q, jnp.zeros_like(p[:, :1])], axis=1)
+    p_n = jnp.take_along_axis(p, n[:, None, None], axis=1)[:, 0]
+    q_n = jnp.take_along_axis(q_pad, n[:, None, None], axis=1)[:, 0]
+    res = jnp.maximum(p_n - q_n, 0.0)
+    mass = jnp.sum(res, axis=-1, keepdims=True)
+    # p == q exactly leaves no residual mass; fall back to p itself
+    res = jnp.where(mass > 0, res / jnp.maximum(mass, 1e-30), p_n)
+    nxt = jax.random.categorical(
+        s_key, jnp.log(jnp.maximum(res, 1e-30)), axis=-1).astype(jnp.int32)
+    return n, nxt
+
+
+def committed_tokens(drafts: jax.Array, n: jax.Array,
+                     nxt: jax.Array) -> jax.Array:
+    """Assemble the committed stream ``(B, k+1)``: accepted drafts
+    ``d_1 .. d_n`` then the correction/bonus token at index ``n``
+    (entries beyond index ``n`` are junk the host never reads)."""
+    k = drafts.shape[1]
+    padded = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)   # (B, k+1)
+    sel = jnp.arange(k + 1, dtype=jnp.int32)[None, :] == n[:, None]
+    return jnp.where(sel, nxt[:, None], padded).astype(jnp.int32)
+
+
+def commit_states(cache: dict, states: dict, n_adv: jax.Array) -> dict:
+    """Re-commit recurrent cache leaves at each row's accepted length.
+
+    ``states[key]`` is ``cache[key]`` with a time axis inserted after the
+    batch axis — ``(L, B, T+1, ...)``, index j = state after j consumed
+    tokens — and ``n_adv (B,)`` is the per-row consumed count (0 for
+    parked/stalled rows, which therefore keep their incoming state).
+    """
+    new = dict(cache)
+    for key, s in states.items():
+        idx = n_adv.reshape((1, -1, 1) + (1,) * (s.ndim - 3))
+        sel = jnp.take_along_axis(s, idx, axis=2)[:, :, 0]
+        new[key] = sel.astype(cache[key].dtype)
+    return new
