@@ -2,13 +2,24 @@
 
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
 
+#: trials per measurement — every benchmark that records a ``time_us``
+#: number also records this, so readers know the variance treatment.
+DEFAULT_TRIALS = 5
 
-def time_us(fn, *args, iters: int = 20) -> float:
-    """Mean wall-clock microseconds per call over ``iters`` dispatches.
+
+def time_us(fn, *args, iters: int = 20, trials: int = DEFAULT_TRIALS) -> float:
+    """Median over ``trials`` of mean wall-clock microseconds per call.
+
+    Each trial times ``iters`` dispatches back to back; the reported
+    number is the MEDIAN of the per-trial means.  A single mean was
+    non-monotonic in problem size on shared CI hosts (one descheduled
+    trial skewed the whole figure — BENCH_kernels.json once reported
+    n=512 faster than n=256); the median discards those outlier trials.
 
     One warmup dispatch absorbs jit compilation; ``jax.block_until_ready``
     handles scalar, tuple and pytree returns uniformly (a conditional
@@ -16,8 +27,17 @@ def time_us(fn, *args, iters: int = 20) -> float:
     small-N numbers — keep it a single call).
     """
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    samples = []
+    for _ in range(max(1, trials)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / iters * 1e6)
+    return statistics.median(samples)
+
+
+def timing_meta(iters: int, trials: int = DEFAULT_TRIALS) -> dict:
+    """Provenance record benchmarks embed beside their timings."""
+    return {"iters": iters, "trials": max(1, trials),
+            "stat": "median_of_trial_means"}

@@ -9,19 +9,28 @@ Two views, written to ``results/BENCH_kernels.json``:
 
    * the fused forward           (8N: read row + write row, fp32),
    * the per-layer order-K scan  (8KN: every layer round-trips HBM),
-   * the whole-cascade fused fwd (8N, INDEPENDENT of K — the tentpole),
+   * the whole-cascade fused fwd (8N, INDEPENDENT of K),
    * the old four-matmul XLA backward (48N: gc/h2/dh1 each round-trip),
-   * the fused Pallas backward   (12N: read x + read g + write dx).
+   * the fused Pallas backward   (12N: read x + read g + write dx),
+   * the reverse-sweep cascade backward (12N, INDEPENDENT of K — the
+     cotangent stays VMEM-resident across all K layers) vs the
+     per-layer HBM-remat scan backward (12KN + 8(K-1)N: K per-layer
+     backward kernels plus the rematerialized layer inputs).
 
    Transform-matrix traffic is excluded: C/C^T are O(N^2) one-offs
    amortized over the batch in every variant equally.
 
-2. **Wall-clock** of the real code paths on this host (interpret mode on
-   CPU — directional only, the container is not the target hardware;
-   compiled kernels on TPU) for fwd, bwd (via ``jax.vjp``) and order-K
-   cascades fused vs per-layer.
+2. **Wall-clock** of the real code paths on this host.  Timings route
+   through ``benchmarks._util.time_us`` (median of trial means; the
+   trial count is recorded in the JSON under ``timing``).  On CPU the
+   kernels run in interpret mode: every timing entry is tagged
+   ``non_roofline: true`` and NO roofline claim (e.g. backward
+   flat-in-K) is asserted from them — those assertions only run on real
+   device backends.  The analytic bytes model is asserted everywhere.
 
-This seeds the repo's perf trajectory: future PRs diff this JSON.
+The bench also snapshots ``ops.CASCADE_BWD_DISPATCHES`` and FAILS if a
+fused-regime cascade backward routed to the per-layer scan — the CI
+regression gate for the reverse-sweep dispatch.
 """
 
 from __future__ import annotations
@@ -33,13 +42,18 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks._util import time_us as _time
+from benchmarks._util import DEFAULT_TRIALS, time_us as _time, timing_meta
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import ops
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 FP32 = 4  # bytes; the kernels' HBM-facing activation width in this repo
+
+#: device wall-clock tolerance for the backward flat-in-K claim: K=8 may
+#: cost at most this multiple of K=1 (FLOPs grow with K even at flat
+#: bytes, so "flat" means bandwidth-flat, not FLOP-flat).
+FLAT_IN_K_DEVICE_FACTOR = 3.0
 
 
 def per_row_bytes(n: int, k: int = 1) -> dict:
@@ -52,11 +66,17 @@ def per_row_bytes(n: int, k: int = 1) -> dict:
                                                     # mediates x2 (wr+rd) +
                                                     # 3 reduction re-reads
         "bwd_fused": 3 * FP32 * n,                  # 12N: x, g in; dx out
+        # Reverse sweep: x, g in; dx out — the K-deep stash lives in
+        # VMEM, so HBM traffic is K-independent.
+        "bwd_cascade_reverse_sweep": 3 * FP32 * n,
+        # Per-layer scan backward: remat writes+reads K-1 layer inputs
+        # (2 * 4N each) and each of K per-layer kernels moves 12N.
+        "bwd_cascade_per_layer_scan": FP32 * n * (3 * k + 2 * (k - 1)),
     }
 
 
-
-def bench_layer(n: int, m: int, iters: int) -> dict:
+def bench_layer(n: int, m: int, iters: int, trials: int,
+                non_roofline: bool) -> dict:
     r = jax.random.PRNGKey(n)
     x = jax.random.normal(r, (m, n))
     a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (n,))
@@ -73,34 +93,39 @@ def bench_layer(n: int, m: int, iters: int) -> dict:
     regime = "fused" if n <= fused_mod.MAX_FUSED_N else "two_call"
     return {
         "n": n, "rows": m, "regime": regime,
-        "fwd_us": _time(fwd, x, a, d, iters=iters),
-        "bwd_us": _time(bwd, x, a, d, g, iters=iters),
+        "non_roofline": non_roofline,
+        "fwd_us": _time(fwd, x, a, d, iters=iters, trials=trials),
+        "bwd_us": _time(bwd, x, a, d, g, iters=iters, trials=trials),
         "roofline_bytes_per_row": per_row_bytes(n),
     }
 
 
-def bench_cascade(n: int, k: int, m: int, iters: int) -> dict:
+def _cascade_operands(n: int, k: int, m: int):
     r = jax.random.PRNGKey(100 + k)
     x = jax.random.normal(r, (m, n))
     a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
     d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    g = jax.random.normal(jax.random.fold_in(r, 3), (m, n))
+    return x, a, d, g
+
+
+def bench_cascade(n: int, k: int, m: int, iters: int, trials: int,
+                  non_roofline: bool) -> dict:
+    x, a, d, _ = _cascade_operands(n, k, m)
 
     fused = jax.jit(lambda x, a, d: ops.acdc_cascade_op(
         x, a, d, relu=True, permute=True))
     per_layer = jax.jit(lambda x, a, d: ops._cascade_per_layer(
         x, a, d, None, True, True))
 
-    @jax.jit
-    def bwd(x, a, d):
-        return jax.grad(lambda a: jnp.sum(ops.acdc_cascade_op(
-            x, a, d, relu=True, permute=True)))(a)
-
     rb = per_row_bytes(n, k)
     return {
         "n": n, "k": k, "rows": m,
-        "cascade_fused_fwd_us": _time(fused, x, a, d, iters=iters),
-        "cascade_per_layer_fwd_us": _time(per_layer, x, a, d, iters=iters),
-        "cascade_fused_bwd_us": _time(bwd, x, a, d, iters=iters),
+        "non_roofline": non_roofline,
+        "cascade_fused_fwd_us": _time(fused, x, a, d, iters=iters,
+                                      trials=trials),
+        "cascade_per_layer_fwd_us": _time(per_layer, x, a, d, iters=iters,
+                                          trials=trials),
         "roofline_bytes_per_row": {
             "fused": rb["fwd_cascade_fused"],
             "per_layer": rb["fwd_per_layer_cascade"],
@@ -108,27 +133,108 @@ def bench_cascade(n: int, k: int, m: int, iters: int) -> dict:
     }
 
 
+def bench_cascade_bwd(n: int, k: int, m: int, iters: int, trials: int,
+                      non_roofline: bool) -> dict:
+    """Full cascade VJP (dx + all diagonal grads), reverse sweep vs the
+    per-layer HBM-remat scan it replaced."""
+    x, a, d, g = _cascade_operands(n, k, m)
+
+    @jax.jit
+    def bwd_reverse_sweep(x, a, d, g):
+        _, vjp = jax.vjp(lambda x, a, d: ops.acdc_cascade_op(
+            x, a, d, relu=True, permute=True), x, a, d)
+        return vjp(g)
+
+    @jax.jit
+    def bwd_per_layer_scan(x, a, d, g):
+        return ops._cascade_bwd_core(True, True, x, a, d, None, g)
+
+    rb = per_row_bytes(n, k)
+    return {
+        "n": n, "k": k, "rows": m,
+        "non_roofline": non_roofline,
+        "reverse_sweep_us": _time(bwd_reverse_sweep, x, a, d, g,
+                                  iters=iters, trials=trials),
+        "per_layer_scan_us": _time(bwd_per_layer_scan, x, a, d, g,
+                                   iters=iters, trials=trials),
+        "roofline_bytes_per_row": {
+            "reverse_sweep": rb["bwd_cascade_reverse_sweep"],
+            "per_layer_scan": rb["bwd_cascade_per_layer_scan"],
+        },
+    }
+
+
+def _assert_cascade_bwd_claims(out: dict, dispatch_before: dict) -> None:
+    """The acceptance checks this bench exists to gate.
+
+    * analytic: reverse-sweep bytes/row identical for every K (the scan
+      model must grow) — asserted on every backend;
+    * dispatch: every fused-regime cascade backward traced here must
+      have routed to the reverse sweep, none to the per-layer scan;
+    * wall-clock flat-in-K: device backends only (interpret-mode CPU
+      timings are non-roofline and prove nothing about HBM).
+    """
+    rows = out["cascade_bwd"]
+    sweep_bytes = {r["roofline_bytes_per_row"]["reverse_sweep"]
+                   for r in rows}
+    assert len(sweep_bytes) == 1, (
+        f"reverse-sweep bytes/row must be K-independent: {sweep_bytes}")
+    scan_bytes = [r["roofline_bytes_per_row"]["per_layer_scan"]
+                  for r in rows]
+    assert scan_bytes == sorted(scan_bytes) and scan_bytes[0] < scan_bytes[-1], (
+        f"per-layer scan bytes/row must grow with K: {scan_bytes}")
+
+    delta = {key: ops.CASCADE_BWD_DISPATCHES[key] - dispatch_before[key]
+             for key in ops.CASCADE_BWD_DISPATCHES}
+    out["cascade_bwd_dispatches"] = delta
+    if delta["reverse_sweep"] < len(rows) or delta["per_layer_scan"] > 0:
+        raise SystemExit(
+            "cascade backward dispatch regressed to per-layer scan: "
+            f"{delta} over {len(rows)} fused-regime benches")
+
+    if not out["interpret_mode"]:
+        by_k = sorted((r["k"], r["reverse_sweep_us"]) for r in rows)
+        lo, hi = by_k[0][1], by_k[-1][1]
+        assert hi <= FLAT_IN_K_DEVICE_FACTOR * lo, (
+            f"device backward not flat in K: K={by_k[0][0]} -> {lo:.1f}us, "
+            f"K={by_k[-1][0]} -> {hi:.1f}us")
+
+
 def main(csv: bool = True, argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
     iters = 2 if args.quick else 5
+    trials = 3 if args.quick else DEFAULT_TRIALS
     m = 128 if args.quick else 256
 
     layer_sizes = (128, 256) if args.quick else (128, 256, 512)
     cascade_ks = (1, 2, 4) if args.quick else (1, 2, 4, 8)
+    bwd_ks = tuple(k for k in cascade_ks if k >= 2)
+
+    interpret = jax.default_backend() != "tpu"
+    if interpret:
+        print("WARNING: interpret-mode (CPU) timings — non-roofline, "
+              "directional only; flat-in-K is asserted on device runs.")
+    dispatch_before = dict(ops.CASCADE_BWD_DISPATCHES)
 
     out = {
         "backend": jax.default_backend(),
-        "interpret_mode": jax.default_backend() != "tpu",
-        "layers": [bench_layer(n, m, iters) for n in layer_sizes],
-        "cascades": [bench_cascade(256, k, m, iters) for k in cascade_ks],
-        # The acceptance check: cascade fusion moves 8N bytes/row for
-        # EVERY K, while the per-layer path scales as 8KN.
+        "interpret_mode": interpret,
+        "timing": timing_meta(iters, trials),
+        "layers": [bench_layer(n, m, iters, trials, interpret)
+                   for n in layer_sizes],
+        "cascades": [bench_cascade(256, k, m, iters, trials, interpret)
+                     for k in cascade_ks],
+        # The training acceptance check: the reverse-sweep backward moves
+        # 12N bytes/row for EVERY K, while the scan path scales with K.
+        "cascade_bwd": [bench_cascade_bwd(256, k, m, iters, trials,
+                                          interpret) for k in bwd_ks],
         "cascade_bytes_model": {
             str(k): per_row_bytes(256, k) for k in cascade_ks
         },
     }
+    _assert_cascade_bwd_claims(out, dispatch_before)
 
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_kernels.json")
@@ -149,6 +255,15 @@ def main(csv: bool = True, argv=None) -> dict:
             print(f"kernels_cascade_per_layer_k{row['k']},"
                   f"{row['cascade_per_layer_fwd_us']:.2f},"
                   f"bytes_row={row['roofline_bytes_per_row']['per_layer']}")
+        for row in out["cascade_bwd"]:
+            print(f"kernels_cascade_bwd_sweep_k{row['k']},"
+                  f"{row['reverse_sweep_us']:.2f},"
+                  f"bytes_row="
+                  f"{row['roofline_bytes_per_row']['reverse_sweep']}")
+            print(f"kernels_cascade_bwd_scan_k{row['k']},"
+                  f"{row['per_layer_scan_us']:.2f},"
+                  f"bytes_row="
+                  f"{row['roofline_bytes_per_row']['per_layer_scan']}")
     return out
 
 

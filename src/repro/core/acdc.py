@@ -150,10 +150,14 @@ def acdc_cascade(params: dict, x: jax.Array, cfg: ACDCConfig) -> jax.Array:
     if cfg.k > 1 and _resolve_method(n, cfg.method) == "pallas":
         # Whole-cascade fusion: one Pallas kernel walks all K layers with
         # the activation row-block resident in VMEM (8N bytes/row instead
-        # of 8KN), ReLU/riffle interleavings included; cascade-level
-        # custom VJP with recompute backward.  Falls back internally to
-        # the per-layer scan when the kernel's VMEM budget is exceeded
-        # (see kernels/acdc_cascade_fused.fits_vmem).
+        # of 8KN), ReLU/riffle interleavings included.  The cascade-level
+        # custom VJP's primary backward is the reverse-sweep kernel
+        # (kernels/acdc_cascade_bwd): one call, cotangent resident in
+        # VMEM, layer inputs recomputed on-chip — 12N bytes/row
+        # independent of K.  Each direction falls back internally to the
+        # per-layer scan when its own VMEM budget is exceeded (the
+        # backward's includes a (K-1)-deep activation stash, so it can
+        # fall back while the forward stays fused).
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.acdc_cascade_op(

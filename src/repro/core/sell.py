@@ -15,11 +15,14 @@ here behind one dispatch point, :func:`structured_linear`:
 * ``acdc``           — the paper's layer (order-K cascade), see
                        :mod:`repro.core.acdc`.  With ``method='pallas'``
                        the whole cascade (ReLU/riffle interleavings
-                       included) runs as one fused TPU kernel with a
-                       cascade-level custom VJP — 8N bytes of HBM traffic
-                       per row regardless of K (``kernels.ops
+                       included) runs as one fused TPU kernel in EACH
+                       direction — 8N bytes of HBM traffic per row
+                       forward and 12N backward (the reverse-sweep VJP),
+                       both regardless of K (``kernels.ops
                        .acdc_cascade_op``); the model zoo's projections
-                       inherit this through ``models.linear.linear_apply``.
+                       inherit this through ``models.linear.linear_apply``,
+                       so the training step sits at the paper's roofline
+                       end to end.
 * ``afdf``           — the complex variant of section 3 (theory oracle).
 
 All follow the row-vector convention ``y = x @ Phi`` on the last axis.

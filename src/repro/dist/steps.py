@@ -79,6 +79,14 @@ def make_train_step(model, cfg, opt, accum_steps: int = 1,
     replicated across ``data_axis`` inside the shard_map body (pure data
     parallelism — the inter-pod DP sync is the traffic worth compressing);
     model-parallel placement still applies outside via jit shardings.
+
+    With ``cfg.sell_method='pallas'`` the SELL projections' cascades
+    differentiate through the fused cascade custom VJP, whose backward is
+    the reverse-sweep Pallas kernel (``kernels/acdc_cascade_bwd``) — the
+    train step's gradient pass moves O(N) HBM bytes per row regardless
+    of cascade depth, matching the fused forward.  No step-builder
+    plumbing is involved; ``jax.value_and_grad`` picks the VJP up here,
+    which tests/test_kernel_grads.py pins with a routing assertion.
     """
     def loss_fn(params, batch):
         return model.loss_fn(params, batch, cfg)

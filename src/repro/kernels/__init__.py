@@ -4,10 +4,10 @@ Layout (per repo convention):
 
 * ``acdc_fused.py``         — single-call fused forward (8N bytes/row);
   also home of ``MAX_FUSED_N``, the VMEM gate shared by every fused path.
-* ``acdc_bwd.py``           — fused backward (paper eqs. 10-14) in one
-  kernel per row-block: recomputes ``h2`` in VMEM (section 5.3 trade),
-  emits the dx tile, accumulates da/dd/dbias in fp32 VMEM scratch across
-  the row grid.  Two-call degradation for N > ``MAX_FUSED_N``.
+* ``acdc_bwd.py``           — fused per-layer backward (paper eqs. 10-14)
+  in one kernel per row-block: recomputes ``h2`` in VMEM (section 5.3
+  trade), emits the dx tile, accumulates da/dd/dbias in fp32 VMEM scratch
+  across the row grid.  Two-call degradation for N > ``MAX_FUSED_N``.
 * ``acdc_cascade_fused.py`` — order-K cascade forward in ONE kernel: the
   activation row-block stays in VMEM across all K layers (8N bytes/row
   independent of K, vs 8KN for the per-layer scan), with interleaved ReLU
@@ -15,17 +15,41 @@ Layout (per repo convention):
   the mid-cascade C^T (no in-kernel gathers).  ``fits_vmem`` documents
   and enforces the budget: (2-3) N^2 transform matrices + K stacked
   diagonals + row tiles.
+* ``acdc_cascade_bwd.py``   — order-K REVERSE-SWEEP backward in ONE
+  kernel: forward re-walk of the x tile stashes the K-1 layer inputs in
+  VMEM scratch, then the eqs. 10-14 sweep runs layer K-1..0 with the
+  cotangent block resident — 12N HBM bytes/row independent of K.  Its
+  VMEM budget includes the (K-1, bm, N) stash, so the row block shrinks
+  with depth and ``ops.py`` falls back to the per-layer scan when no
+  block fits.
 * ``scaled_matmul.py``      — blocked (m,n,k) scaled matmul kernel; the
   building block of every > ``MAX_FUSED_N`` regime.
 * ``autotune.py``           — first-call on-device row-block sweep
-  ({64, 128, 256}, memoized per (N, K, dtype, direction)) feeding ``bm``
-  to the fused forward/backward/cascade kernels; returns the old fixed
+  ({64, 128, 256}, memoized per (N, K, dtype, direction) and persisted
+  to ``results/autotune_cache.json`` for device runs) feeding ``bm`` to
+  the fused fwd/bwd/cascade/cascade_bwd kernels; returns the old fixed
   constants off-device so CPU/CI runs are unchanged.
 * ``ops.py``                — jit'd public wrappers + custom VJPs:
   per-layer ``acdc_fused``/``acdc_fused_nobias`` (fused Pallas backward)
   and cascade-level ``acdc_cascade_op`` (whole-cascade forward fusion,
-  recompute backward over per-layer fused kernels).
+  reverse-sweep backward, per-layer-scan fallback; routing counted in
+  ``CASCADE_BWD_DISPATCHES``).
 * ``ref.py``                — pure-jnp oracles the tests assert against,
   including the four-matmul backward formulation the fused kernel
   replaced.
+
+Backward memory model, per row of an order-K cascade (the trajectory
+BENCH_kernels.json tracks; N fp32 features, transform matrices excluded
+as batch-amortized)::
+
+    four XLA matmuls / layer     48N * K   gc, h2, dh1 each round-trip HBM
+    fused per-layer kernel       12N * K   x, g in, dx out — per layer,
+      (+ scan remat)           + 8N*(K-1)  layer inputs written+read back
+    reverse-sweep kernel         12N       x, g in, dx out ONCE; stash
+                                           and cotangent live in VMEM,
+                                           independent of K
+
+The forward trajectory is the analogous 48N -> 8N*K -> 8N (whole-cascade
+fusion).  Together they put the full training step, not just inference,
+at the paper's section 5 roofline.
 """

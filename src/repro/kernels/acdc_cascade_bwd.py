@@ -1,0 +1,252 @@
+"""Reverse-sweep fused cascade backward — O(1)-in-K HBM bytes per row.
+
+The cascade-level custom VJP used to rematerialize every layer input to
+HBM (``lax.scan`` forward re-walk) and then run K fused per-layer
+backward kernels in reverse: 12N bytes/row per layer plus the remat
+round trips, i.e. O(KN) total — BENCH_kernels.json showed the backward
+wall clock growing linearly in K while the fused forward stayed flat.
+
+This kernel walks all K stacked layers in reverse in ONE Pallas call,
+per row-block:
+
+1. **Forward re-walk in VMEM** — the x tile is read from HBM once and
+   pushed through the K-1 interleaved layers exactly as the fused
+   forward does (fp32 resident activation, ReLU on the VPU, riffle
+   folded into the mid-cascade ``C^T`` columns).  Each layer input
+   ``h_i`` is stashed in a ``(K-1, bm, N)`` VMEM scratch — recomputation
+   replaces the HBM remat (the paper's section 5.3 memory/runtime trade
+   applied at cascade scope).
+2. **Reverse sweep with the cotangent resident** — the g tile is read
+   once and the eqs. (10)-(14) backward runs layer K-1 .. 0 with the
+   cotangent block never leaving VMEM.  Per-layer dA/dD/dbias partial
+   sums accumulate in fp32 ``(K, N)`` VMEM scratch across the row grid
+   and are written once, at the last grid step.
+
+Interleaving transposes are folded into the transform operands so no
+in-kernel gather is ever issued:
+
+* forward re-walk: ``relu(z)[:, p] == relu(z @ C^T[:, p])`` — same
+  column-permuted ``ct_mid`` as the fused forward;
+* ReLU mask: ``h_{i+1} = relu(z_i)[:, p]`` is the stashed NEXT layer
+  input, and ``(z_i > 0)[:, p] == (h_{i+1} > 0)`` — so the mask applies
+  elementwise in h-space against the stash, before un-permuting;
+* reverse un-permute: ``w[:, p^-1] @ C == w @ C[p, :] == w @ ct_mid^T``
+  — a ``dot_general`` contraction against ``ct_mid``'s second axis, no
+  fourth matrix in VMEM.
+
+HBM traffic per row: read x + read g + write dx = 12N bytes,
+INDEPENDENT of K — symmetric with the fused forward's 8N.  The price is
+the stash: VMEM grows by ``4 (K-1) bm N`` bytes, so :func:`pick_bm`
+shrinks the row block with depth and ``ops.py`` falls back to the
+per-layer scan path when no block size fits (the forward can stay fused
+while the backward falls back — the budgets differ).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.acdc_cascade_fused import VMEM_BUDGET
+from repro.kernels.acdc_fused import MAX_FUSED_N
+
+DEFAULT_BM = 128
+
+#: candidate row blocks, largest first; smaller than the forward's floor
+#: because the stash eats VMEM linearly in K.
+CANDIDATE_BMS = (256, 128, 64, 32, 16)
+
+
+def cascade_bwd_vmem_bytes(n: int, k: int, *, permute: bool, bias: bool,
+                           bm: int = DEFAULT_BM) -> int:
+    """Estimated live VMEM of the reverse-sweep backward (see module doc)."""
+    mats = 3 if permute else 2          # C, C^T (+ column-permuted C^T)
+    diags = 3 if bias else 2            # stacked a, d (+ bias)
+    accs = 2 * diags                    # (K, N) grad accumulators + outputs
+    stash = (k - 1) * bm * n            # recomputed layer inputs
+    tiles = 7 * bm * n                  # x, g, dx + gc/h2/dh1/h live fp32
+    return 4 * (mats * n * n + (diags + accs) * k * n + stash + tiles)
+
+
+def pick_bm(n: int, k: int, *, permute: bool, bias: bool) -> Optional[int]:
+    """Largest row block that keeps the reverse sweep inside the VMEM
+    budget, or ``None`` if even the smallest tile doesn't fit."""
+    if n > MAX_FUSED_N or k < 2:
+        return None
+    for bm in CANDIDATE_BMS:
+        if cascade_bwd_vmem_bytes(n, k, permute=permute, bias=bias,
+                                  bm=bm) <= VMEM_BUDGET:
+            return bm
+    return None
+
+
+def fits_vmem(n: int, k: int, *, permute: bool, bias: bool) -> bool:
+    """Whether the order-K reverse-sweep backward fits the VMEM budget."""
+    return pick_bm(n, k, permute=permute, bias=bias) is not None
+
+
+def _unpermute_matmul(w, ct_mid):
+    """``w[:, p^-1] @ C`` without a gather: contract against ``ct_mid``'s
+    second axis (``ct_mid = C^T[:, p]`` so ``ct_mid^T = C[p, :]``)."""
+    return jax.lax.dot_general(
+        w, ct_mid, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _cascade_bwd_kernel(k, nm, relu, has_bias, has_mid, *refs):
+    """One row-block: forward re-walk (stash) + reverse sweep, all VMEM."""
+    it = iter(refs)
+    x_ref, g_ref, a_ref, d_ref = (next(it) for _ in range(4))
+    bias_ref = next(it) if has_bias else None
+    c_ref, ct_ref = next(it), next(it)
+    ct_mid_ref = next(it) if has_mid else None
+    dx_ref, da_ref, dd_ref = next(it), next(it), next(it)
+    db_ref = next(it) if has_bias else None
+    stash = next(it)
+    da_acc, dd_acc = next(it), next(it)
+    db_acc = next(it) if has_bias else None
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        da_acc[...] = jnp.zeros_like(da_acc)
+        dd_acc[...] = jnp.zeros_like(dd_acc)
+        if db_acc is not None:
+            db_acc[...] = jnp.zeros_like(db_acc)
+
+    c = c_ref[...].astype(jnp.float32)
+    ct = ct_ref[...].astype(jnp.float32)
+    ct_mid = ct_mid_ref[...].astype(jnp.float32) if has_mid else ct
+    x = x_ref[...].astype(jnp.float32)
+
+    # ---- forward re-walk: stash h_1 .. h_{K-1} (h_0 == x tile). --------
+    h = x
+    for li in range(k - 1):  # K static: unrolled, stash indexed statically
+        h1 = h * a_ref[li:li + 1, :].astype(jnp.float32)
+        h2 = jnp.dot(h1, c, preferred_element_type=jnp.float32)
+        h3 = h2 * d_ref[li:li + 1, :].astype(jnp.float32)
+        if bias_ref is not None:
+            h3 = h3 + bias_ref[li:li + 1, :].astype(jnp.float32)
+        h = jnp.dot(h3, ct_mid, preferred_element_type=jnp.float32)
+        if relu:
+            h = jnp.maximum(h, 0.0)
+        stash[li] = h
+
+    # ---- reverse sweep: cotangent stays resident. ----------------------
+    gcur = g_ref[...].astype(jnp.float32)
+    for li in range(k - 1, -1, -1):
+        h_i = stash[li - 1] if li > 0 else x
+        if li == k - 1:
+            gc = jnp.dot(gcur, c, preferred_element_type=jnp.float32)
+        else:
+            # interleave backward: mask in h-space against the stashed
+            # NEXT input, un-permute folded into the transform.
+            if relu:
+                gcur = jnp.where(stash[li] > 0.0, gcur, 0.0)
+            if has_mid:
+                gc = _unpermute_matmul(gcur, ct_mid_ref[...].astype(
+                    jnp.float32))
+            else:
+                gc = jnp.dot(gcur, c, preferred_element_type=jnp.float32)
+        if db_acc is not None:
+            db_acc[li:li + 1, :] += jnp.sum(gc, axis=0, keepdims=True)
+        h2 = jnp.dot(h_i * a_ref[li:li + 1, :].astype(jnp.float32), c,
+                     preferred_element_type=jnp.float32)
+        dd_acc[li:li + 1, :] += jnp.sum(h2 * gc, axis=0, keepdims=True)
+        dh1 = jnp.dot(gc * d_ref[li:li + 1, :].astype(jnp.float32), ct,
+                      preferred_element_type=jnp.float32)
+        da_acc[li:li + 1, :] += jnp.sum(h_i * dh1, axis=0, keepdims=True)
+        gcur = a_ref[li:li + 1, :].astype(jnp.float32) * dh1
+
+    dx_ref[...] = gcur.astype(dx_ref.dtype)
+
+    @pl.when(i == nm - 1)
+    def _finalize():
+        da_ref[...] = da_acc[...]
+        dd_ref[...] = dd_acc[...]
+        if db_ref is not None:
+            db_ref[...] = db_acc[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("relu", "bm", "interpret"))
+def acdc_cascade_bwd_pallas(
+    x: jax.Array,
+    g: jax.Array,
+    a: jax.Array,
+    d: jax.Array,
+    bias: Optional[jax.Array],
+    c: jax.Array,
+    ct: jax.Array,
+    ct_mid: Optional[jax.Array],
+    *,
+    relu: bool = False,
+    bm: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """Reverse-sweep backward over 2-D ``x``/``g`` of shape (M, N).
+
+    ``a``/``d``/``bias`` are the stacked (K, N) per-layer diagonals;
+    ``ct_mid`` the column-permuted inverse transform of the riffled
+    forward (``None`` when not riffling).  Returns ``(dx, da, dd, db)``
+    with ``dx`` in ``x.dtype`` and the (K, N) diagonal grads in fp32
+    (accumulator precision; callers cast); ``db`` is ``None`` when
+    ``bias`` is.  Zero-padded g rows contribute exact zeros to every
+    reduction, so ragged M is padded internally for free.
+    """
+    m, n = x.shape
+    k = a.shape[0]
+    if k < 2:
+        raise ValueError("reverse-sweep backward needs K >= 2 "
+                         f"(got K={k}); K=1 uses the per-layer kernel")
+    bm = min(bm, max(8, m))
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+        g = jnp.pad(g, ((0, pad_m), (0, 0)))
+    nm = x.shape[0] // bm
+    grid = (nm,)
+
+    stack_spec = pl.BlockSpec((k, n), lambda i: (0, 0))
+    mat_spec = pl.BlockSpec((n, n), lambda i: (0, 0))
+    row_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+
+    operands = [x, g, a, d]
+    in_specs = [row_spec, row_spec, stack_spec, stack_spec]
+    if bias is not None:
+        operands.append(bias)
+        in_specs.append(stack_spec)
+    operands += [c, ct]
+    in_specs += [mat_spec, mat_spec]
+    if ct_mid is not None:
+        operands.append(ct_mid)
+        in_specs.append(mat_spec)
+
+    n_diag_outs = 3 if bias is not None else 2
+    stack_out = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    scratch = [pltpu.VMEM((k - 1, bm, n), jnp.float32)]
+    scratch += [pltpu.VMEM((k, n), jnp.float32)] * n_diag_outs
+
+    kernel = functools.partial(_cascade_bwd_kernel, k, nm, relu,
+                               bias is not None, ct_mid is not None)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[row_spec] + [stack_spec] * n_diag_outs,
+        out_shape=[jax.ShapeDtypeStruct((x.shape[0], n), x.dtype)]
+        + [stack_out] * n_diag_outs,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+    dx, da, dd = outs[0], outs[1], outs[2]
+    db = outs[3] if bias is not None else None
+    if pad_m:
+        dx = dx[:m]
+    return dx, da, dd, db

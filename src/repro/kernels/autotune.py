@@ -19,10 +19,23 @@ dispatched through an AOT ``lower(...).compile()`` executable (compiled
 callables run for real whatever the ambient trace state), so the timing
 happens on device at trace time and only the chosen ``bm`` (a static
 Python int) shapes the traced kernel.
+
+Directions: ``fwd``/``bwd`` (per-layer kernels), ``cascade`` (fused
+forward), ``cascade_bwd`` (reverse-sweep backward; candidates filtered
+by its stash-inclusive VMEM budget).
+
+Sweep winners also persist across processes: real device sweeps are
+spilled to ``results/autotune_cache.json`` (keyed by backend —
+fallback constants never leak between backends) and reloaded lazily on
+the first TPU-side miss, so repeated ``launch/train`` runs skip the
+first-call on-device sweep.  ``REPRO_AUTOTUNE_CACHE=0`` disables the
+file; ``REPRO_AUTOTUNE_CACHE_PATH`` relocates it.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -31,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core import transforms
 from repro.kernels import acdc_bwd as bwd_mod
+from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
 
@@ -41,7 +55,11 @@ SWEEP_ROWS = 1024
 #: timing repetitions per candidate (after one compile/warmup call)
 SWEEP_REPS = 3
 
+#: set to "0"/"off"/"false" to disable the on-disk sweep-result cache
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
 _CACHE: Dict[Tuple, int] = {}
+_PERSIST_LOADED = False
 
 
 def _fallback(direction: str, n: int, k: int, *, bias: bool,
@@ -54,17 +72,109 @@ def _fallback(direction: str, n: int, k: int, *, bias: bool,
     if direction == "cascade":
         bm = cascade_mod.pick_bm(n, k, permute=permute, bias=bias)
         return bm if bm is not None else cascade_mod.DEFAULT_BM
+    if direction == "cascade_bwd":
+        bm = cascade_bwd_mod.pick_bm(n, k, permute=permute, bias=bias)
+        return bm if bm is not None else cascade_bwd_mod.DEFAULT_BM
     raise ValueError(f"unknown direction {direction!r}")
 
 
 def _candidates(direction: str, n: int, k: int, *, bias: bool,
                 permute: bool):
-    if direction != "cascade":
-        return list(CANDIDATE_BMS)
-    return [bm for bm in CANDIDATE_BMS
-            if cascade_mod.cascade_vmem_bytes(
-                n, k, permute=permute, bias=bias,
-                bm=bm) <= cascade_mod.VMEM_BUDGET]
+    if direction == "cascade":
+        return [bm for bm in CANDIDATE_BMS
+                if cascade_mod.cascade_vmem_bytes(
+                    n, k, permute=permute, bias=bias,
+                    bm=bm) <= cascade_mod.VMEM_BUDGET]
+    if direction == "cascade_bwd":
+        return [bm for bm in CANDIDATE_BMS
+                if cascade_bwd_mod.cascade_bwd_vmem_bytes(
+                    n, k, permute=permute, bias=bias,
+                    bm=bm) <= cascade_mod.VMEM_BUDGET]
+    return list(CANDIDATE_BMS)
+
+
+# ---------------------------------------------------------------------------
+# Persistent sweep cache (results/autotune_cache.json).
+#
+# Sweeps are memoized per process; a fresh ``launch/train`` run used to
+# re-pay the first-call on-device sweep for every (N, K, dtype,
+# direction).  Swept winners are spilled to a small JSON and reloaded on
+# startup.  Only REAL device sweeps are persisted (the file records the
+# backend and is ignored under any other), so CPU fallback constants
+# never leak into a TPU run.  Set REPRO_AUTOTUNE_CACHE=0 to disable.
+# ---------------------------------------------------------------------------
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _persist_enabled() -> bool:
+    return os.environ.get(CACHE_ENV, "1").lower() not in (
+        "0", "off", "false", "no")
+
+
+def _cache_path() -> str:
+    override = os.environ.get(CACHE_ENV + "_PATH")
+    if override:
+        return override
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "results", "autotune_cache.json")
+
+
+def _key_str(key: Tuple) -> str:
+    return "|".join(str(p) for p in key)
+
+
+def _key_from_str(s: str) -> Tuple:
+    direction, n, k, dtype, bias, permute = s.split("|")
+    return (direction, int(n), int(k), dtype,
+            bias == "True", permute == "True")
+
+
+def _load_persistent() -> None:
+    """Merge on-disk sweep winners into the in-process memo (lazy, once)."""
+    global _PERSIST_LOADED
+    if _PERSIST_LOADED:
+        return
+    _PERSIST_LOADED = True
+    if not _persist_enabled():
+        return
+    try:
+        with open(_cache_path()) as f:
+            blob = json.load(f)
+    except (OSError, ValueError):
+        return
+    if blob.get("backend") != _backend():
+        return
+    for key_s, bm in blob.get("entries", {}).items():
+        try:
+            _CACHE.setdefault(_key_from_str(key_s), int(bm))
+        except (ValueError, TypeError):
+            continue
+
+
+def _save_persistent(key: Tuple, bm: int) -> None:
+    """Record one swept winner on disk (read-merge-write, best effort)."""
+    if not _persist_enabled():
+        return
+    path = _cache_path()
+    entries: Dict[str, int] = {}
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+        if blob.get("backend") == _backend():
+            entries = dict(blob.get("entries", {}))
+    except (OSError, ValueError):
+        pass
+    entries[_key_str(key)] = int(bm)
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"backend": _backend(), "entries": entries}, f,
+                      indent=2, sort_keys=True)
+    except OSError:
+        pass
 
 
 def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
@@ -81,7 +191,7 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
         x = jax.random.normal(key, (SWEEP_ROWS, n), dtype)
         c = transforms.dct_matrix(n, dtype=jnp.float32)
         ct = transforms.idct_matrix(n, dtype=jnp.float32)
-        if direction == "cascade":
+        if direction in ("cascade", "cascade_bwd"):
             a = jnp.ones((k, n), jnp.float32)
             d = jnp.ones((k, n), jnp.float32)
             b = jnp.zeros((k, n), jnp.float32) if bias else None
@@ -90,6 +200,7 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
             a = jnp.ones((n,), jnp.float32)
             d = jnp.ones((n,), jnp.float32)
             b = jnp.zeros((n,), jnp.float32) if bias else None
+        if direction in ("bwd", "cascade_bwd"):
             g = jax.random.normal(jax.random.fold_in(key, 1),
                                   (SWEEP_ROWS, n), dtype)
 
@@ -97,6 +208,10 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
         if direction == "cascade":
             args = (x, a, d, b, c, ct, ct_mid)
             compiled = cascade_mod.acdc_cascade_pallas.lower(
+                *args, relu=False, bm=bm, interpret=interpret).compile()
+        elif direction == "cascade_bwd":
+            args = (x, g, a, d, b, c, ct, ct_mid)
+            compiled = cascade_bwd_mod.acdc_cascade_bwd_pallas.lower(
                 *args, relu=False, bm=bm, interpret=interpret).compile()
         elif direction == "fwd":
             args = (x, a, d, b, c, ct)
@@ -156,11 +271,16 @@ def autotuned_bm(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
-    if jax.default_backend() != "tpu":
+    if _backend() != "tpu":
         bm = _fallback(direction, n, k, bias=bias, permute=permute)
     else:
+        _load_persistent()
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return hit
         try:
             bm = sweep(direction, n, k, dtype, bias=bias, permute=permute)
+            _save_persistent(key, bm)
         except Exception:
             bm = _fallback(direction, n, k, bias=bias, permute=permute)
     _CACHE[key] = bm

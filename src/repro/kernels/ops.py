@@ -18,10 +18,16 @@
 including the interleaved ReLU and riffle permutation of the CaffeNet
 configuration — runs as ONE Pallas kernel (``acdc_cascade_fused.py``)
 moving 8N bytes per row instead of 8KN, behind a cascade-level custom
-VJP whose backward recomputes the per-layer inputs and then applies the
-fused per-layer backward kernel in reverse.  When the cascade exceeds
-the fused-kernel VMEM budget it falls back to the per-layer scan (each
-layer still fused forward + backward).
+VJP.  The primary backward is the reverse-sweep kernel
+(``acdc_cascade_bwd.py``): one Pallas call walking all K layers in
+reverse with the cotangent resident in VMEM and layer inputs recomputed
+on-chip — 12N bytes/row independent of K.  When its VMEM budget (which
+includes a (K-1)-deep activation stash) doesn't fit, the backward falls
+back to the per-layer HBM-remat scan; when the whole cascade exceeds
+the forward fused budget both directions fall back to the per-layer
+scan (each layer still fused forward + backward).  Routing decisions
+are counted in ``CASCADE_BWD_DISPATCHES`` for the bench/CI regression
+gate.
 
 The backward formulas are the paper's eqs. (10)-(14):
 
@@ -41,12 +47,20 @@ import jax.numpy as jnp
 
 from repro.core import transforms
 from repro.kernels import acdc_bwd as bwd_mod
+from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import autotune
 from repro.kernels import scaled_matmul as smm_mod
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+#: trace-time routing decisions of the cascade backward, for benches/CI:
+#: every time a cascade VJP backward is traced, exactly one bucket
+#: increments.  ``reverse_sweep`` is the fused O(1)-in-K kernel;
+#: ``per_layer_scan`` the HBM-remat fallback.  (Counts tracings, not
+#: dispatches — a jit cache hit re-runs the kernel without retracing.)
+CASCADE_BWD_DISPATCHES = {"reverse_sweep": 0, "per_layer_scan": 0}
 
 
 def _flatten(x):
@@ -181,10 +195,51 @@ def _cascade_fwd_impl(x2, a, d, bias, relu, permute, *, interpret):
                                            interpret=interpret)
 
 
+def _cascade_bwd_fused(relu, permute, x, a, d, bias, g):
+    """Reverse-sweep cascade backward: ONE Pallas kernel walks all K
+    layers in reverse with the cotangent resident in VMEM, recomputing
+    layer inputs on-chip (``acdc_cascade_bwd.py``) — 12N HBM bytes/row
+    independent of K, symmetric with the fused forward."""
+    n = x.shape[-1]
+    k = a.shape[0]
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    c = transforms.dct_matrix(n, dtype=jnp.float32)
+    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    ct_mid = ct[:, transforms.make_riffle(n)] if permute else None
+    bm = autotune.autotuned_bm("cascade_bwd", n, k, x2.dtype,
+                               bias=bias is not None, permute=permute)
+    dx, da, dd, db = cascade_bwd_mod.acdc_cascade_bwd_pallas(
+        x2, g2, a, d, bias, c, ct, ct_mid, relu=relu, bm=bm,
+        interpret=_INTERPRET)
+    dx = dx.reshape(shape)
+    if bias is None:
+        return dx, da.astype(a.dtype), dd.astype(d.dtype)
+    return (dx, da.astype(a.dtype), dd.astype(d.dtype),
+            db.astype(bias.dtype))
+
+
+def _cascade_bwd_dispatch(relu, permute, x, a, d, bias, g):
+    """Primary VJP routing: reverse-sweep kernel when its (deeper) VMEM
+    budget fits, else the per-layer HBM-remat scan.  The budgets differ —
+    the backward stashes (K-1) row blocks — so a cascade can run fused
+    forward and still fall back here."""
+    n = x.shape[-1]
+    k = a.shape[0]
+    if cascade_bwd_mod.fits_vmem(n, k, permute=permute,
+                                 bias=bias is not None):
+        CASCADE_BWD_DISPATCHES["reverse_sweep"] += 1
+        return _cascade_bwd_fused(relu, permute, x, a, d, bias, g)
+    CASCADE_BWD_DISPATCHES["per_layer_scan"] += 1
+    return _cascade_bwd_core(relu, permute, x, a, d, bias, g)
+
+
 def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
-    """Cascade backward: recompute per-layer inputs (section 5.3 trade at
-    cascade scope — the fused forward stores NOTHING but x), then run the
-    fused per-layer backward kernel in reverse under ``lax.scan``."""
+    """Cascade backward fallback: recompute per-layer inputs to HBM
+    (section 5.3 trade at cascade scope — the fused forward stores
+    NOTHING but x), then run the fused per-layer backward kernel in
+    reverse under ``lax.scan``.  O(KN) bytes/row; used only when the
+    reverse-sweep kernel's VMEM budget doesn't fit."""
     n = x.shape[-1]
     x2, shape = _flatten(x)
     g2, _ = _flatten(g)
@@ -264,7 +319,7 @@ def _cascade_bias_fwd(relu, permute, x, a, d, bias):
 
 def _cascade_bias_bwd(relu, permute, res, g):
     x, a, d, bias = res
-    return _cascade_bwd_core(relu, permute, x, a, d, bias, g)
+    return _cascade_bwd_dispatch(relu, permute, x, a, d, bias, g)
 
 
 _cascade_bias.defvjp(_cascade_bias_fwd, _cascade_bias_bwd)
@@ -284,7 +339,7 @@ def _cascade_nobias_fwd(relu, permute, x, a, d):
 
 def _cascade_nobias_bwd(relu, permute, res, g):
     x, a, d = res
-    return _cascade_bwd_core(relu, permute, x, a, d, None, g)
+    return _cascade_bwd_dispatch(relu, permute, x, a, d, None, g)
 
 
 _cascade_nobias.defvjp(_cascade_nobias_fwd, _cascade_nobias_bwd)

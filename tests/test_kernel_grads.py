@@ -8,8 +8,13 @@ Coverage matrix from the fused-training-hot-path issue:
 * direct VJP outputs vs the four-matmul reference formulation;
 * cascade-fused forward vs the ``acdc_cascade`` oracle with ReLU/riffle
   on and off, plus cascade-level gradient parity;
+* reverse-sweep cascade backward vs the per-layer-scan oracle across
+  {relu} x {riffle} x {fp32, bf16-with-fp32-masters} x ragged rows,
+  with routing assertions (in-budget -> reverse sweep, over-budget ->
+  scan fallback, gradients unchanged either way);
 * the model zoo's ``linear_apply`` projections and the ``dist/steps.py``
-  train step pick the pallas path up unchanged.
+  train step pick the pallas path up unchanged (including the
+  reverse-sweep backward in the train step's VJP).
 """
 
 import dataclasses
@@ -214,6 +219,128 @@ def test_cascade_fallback_beyond_vmem_budget():
                                atol=2e-3, rtol=1e-3)
 
 
+# ---------------------------------------------------------------------------
+# Reverse-sweep cascade backward (kernels/acdc_cascade_bwd.py).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("permute", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows", [16, 13])  # block-aligned and ragged
+def test_reverse_sweep_backward_matches_scan_oracle(relu, permute, dtype,
+                                                    rows):
+    """The reverse-sweep kernel's raw cotangents equal the per-layer-scan
+    path it replaced (ops._cascade_bwd_core), for every interleave combo,
+    fp32 and bf16-with-fp32-masters, aligned and ragged row counts."""
+    n, k = 128, 3
+    r = jax.random.PRNGKey(17)
+    x = jax.random.normal(r, (rows, n), dtype)
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    b = 0.05 + 0.1 * jax.random.normal(jax.random.fold_in(r, 3), (k, n))
+    g = jax.random.normal(jax.random.fold_in(r, 4), (rows, n), dtype)
+
+    got = ops._cascade_bwd_fused(relu, permute, x, a, d, b, g)
+    want = ops._cascade_bwd_core(relu, permute, x, a, d, b, g)
+    # bf16: the scan oracle casts the rematerialized activations back to
+    # bf16 between layers while the reverse sweep (like the fused
+    # forward) keeps them fp32 on-chip — compare loosely.
+    atol = 2e-4 if dtype == jnp.float32 else 0.15
+    rtol = 1e-3 if dtype == jnp.float32 else 0.1
+    for name, gv, wv in zip(("dx", "da", "dd", "db"), got, want):
+        assert gv.dtype == wv.dtype, name
+        np.testing.assert_allclose(
+            np.asarray(gv, np.float32), np.asarray(wv, np.float32),
+            atol=atol, rtol=rtol, err_msg=f"{name} relu={relu} "
+            f"permute={permute} rows={rows}")
+
+
+def test_reverse_sweep_backward_nobias_matches_scan_oracle():
+    n, k = 128, 4
+    r = jax.random.PRNGKey(23)
+    x = jax.random.normal(r, (10, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    g = jax.random.normal(jax.random.fold_in(r, 3), (10, n))
+    got = ops._cascade_bwd_fused(True, True, x, a, d, None, g)
+    want = ops._cascade_bwd_core(True, True, x, a, d, None, g)
+    assert len(got) == 3  # no dbias entry for the bias-free primitive
+    for name, gv, wv in zip(("dx", "da", "dd"), got, want):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(wv),
+                                   atol=2e-4, rtol=1e-3, err_msg=name)
+
+
+def test_cascade_backward_routes_reverse_sweep_in_budget():
+    """Fused-regime cascades must take the reverse-sweep VJP (the CI
+    dispatch-regression gate counts exactly this)."""
+    n, k = 128, 3
+    cfg = A.ACDCConfig(n=n, k=k, relu=True, permute=True, bias=True,
+                       method="pallas")
+    p = A.init_acdc_params(jax.random.PRNGKey(29), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(30), (8, n))
+    before = dict(ops.CASCADE_BWD_DISPATCHES)
+    jax.grad(lambda p: jnp.sum(jnp.tanh(A.acdc_cascade(p, x, cfg))))(p)
+    assert ops.CASCADE_BWD_DISPATCHES["reverse_sweep"] == \
+        before["reverse_sweep"] + 1
+    assert ops.CASCADE_BWD_DISPATCHES["per_layer_scan"] == \
+        before["per_layer_scan"]
+
+
+def test_cascade_backward_over_budget_falls_back_to_scan(monkeypatch):
+    """When the stash-inclusive backward budget doesn't fit, the forward
+    can stay fused while the backward routes to the per-layer scan — and
+    gradients must be unchanged."""
+    from repro.kernels import acdc_cascade_bwd as cbwd_mod
+
+    n, k = 128, 3
+    cfg = A.ACDCConfig(n=n, k=k, relu=True, permute=True, bias=False,
+                       method="pallas")
+    p = A.init_acdc_params(jax.random.PRNGKey(31), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(32), (8, n))
+
+    def loss(p):
+        return jnp.sum(jnp.tanh(A.acdc_cascade(p, x, cfg)))
+
+    want = jax.grad(loss)(p)
+    monkeypatch.setattr(cbwd_mod, "pick_bm",
+                        lambda *a, **kw: None)  # force over-budget
+    before = dict(ops.CASCADE_BWD_DISPATCHES)
+    got = jax.grad(loss)(p)
+    assert ops.CASCADE_BWD_DISPATCHES["per_layer_scan"] == \
+        before["per_layer_scan"] + 1
+    for key in want:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]),
+                                   atol=2e-4, rtol=1e-3, err_msg=key)
+
+
+def test_reverse_sweep_rejects_k1():
+    from repro.kernels import acdc_cascade_bwd as cbwd_mod
+    from repro.core import transforms
+
+    n = 128
+    c = transforms.dct_matrix(n)
+    ct = transforms.idct_matrix(n)
+    with pytest.raises(ValueError, match="K >= 2"):
+        cbwd_mod.acdc_cascade_bwd_pallas(
+            jnp.ones((8, n)), jnp.ones((8, n)), jnp.ones((1, n)),
+            jnp.ones((1, n)), None, c, ct, None, interpret=True)
+
+
+def test_reverse_sweep_budget_shrinks_block_with_depth():
+    """pick_bm must account for the (K-1)-deep VMEM stash: deep riffled
+    cascades at MAX_FUSED_N get a smaller block or fall back entirely."""
+    from repro.kernels import acdc_cascade_bwd as cbwd_mod
+
+    shallow = cbwd_mod.pick_bm(256, 2, permute=True, bias=True)
+    deep = cbwd_mod.pick_bm(fused_mod.MAX_FUSED_N, 4, permute=True,
+                            bias=True)
+    assert shallow is not None
+    assert deep is None or deep < shallow
+    assert cbwd_mod.pick_bm(fused_mod.MAX_FUSED_N * 2, 2, permute=False,
+                            bias=False) is None
+
+
 def test_cascade_k1_degenerates_to_single_layer():
     n = 128
     cfg = A.ACDCConfig(n=n, k=1, bias=True, method="pallas")
@@ -251,7 +378,10 @@ def test_linear_apply_pallas_matches_matmul_method():
 
 @pytest.mark.slow
 def test_train_step_runs_with_pallas_sell():
-    """dist/steps.make_train_step trains through the fused cascade VJP."""
+    """dist/steps.make_train_step trains through the fused cascade VJP —
+    and its backward picks up the reverse-sweep kernel (the smoke SELL
+    cascades are K>=2 and well inside the VMEM budget, so a per-layer
+    routing here would be a dispatch regression)."""
     from repro.configs import registry
     from repro.data import DataConfig, SyntheticLM
     from repro.dist import steps as steps_mod
@@ -267,7 +397,12 @@ def test_train_step_runs_with_pallas_sell():
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                   global_batch=2))
     state = steps_mod.init_state(model, cfg, opt, jax.random.PRNGKey(0))
+    before = dict(ops.CASCADE_BWD_DISPATCHES)
     state, m0 = step(state, data.batch_at(0))
     state, m1 = step(state, data.batch_at(1))
     assert np.isfinite(float(m0["loss"])) and np.isfinite(float(m1["loss"]))
     assert int(state["step"]) == 2
+    assert ops.CASCADE_BWD_DISPATCHES["reverse_sweep"] > \
+        before["reverse_sweep"]
+    assert ops.CASCADE_BWD_DISPATCHES["per_layer_scan"] == \
+        before["per_layer_scan"]

@@ -221,10 +221,80 @@ def test_autotune_sweep_runs_kernels_in_interpret_mode():
     """End-to-end: the default timer path dispatches every direction's
     kernel (interpret mode) and returns a legal candidate."""
     from repro.kernels import autotune
-    for direction in ("fwd", "bwd", "cascade"):
+    for direction in ("fwd", "bwd", "cascade", "cascade_bwd"):
         bm = autotune.sweep(direction, 128, 2, bias=True, interpret=True,
                             timer=None)
         assert bm in autotune.CANDIDATE_BMS
+
+
+def test_autotune_cascade_bwd_fallback_is_budget_derived():
+    """Off-device the cascade_bwd direction answers with the reverse-sweep
+    module's own pick_bm (stash-inclusive budget), not the forward's."""
+    from repro.kernels import acdc_cascade_bwd as cbwd_mod
+    from repro.kernels import autotune
+    got = autotune.autotuned_bm("cascade_bwd", 256, 4, bias=True,
+                                permute=True)
+    assert got == cbwd_mod.pick_bm(256, 4, permute=True, bias=True)
+
+
+def test_autotune_persistent_cache_roundtrip(tmp_path, monkeypatch):
+    """Swept winners spill to JSON and reload in a fresh process-alike
+    (cleared memo); entries from a different backend are ignored; the
+    env kill-switch disables both directions."""
+    from repro.kernels import autotune
+
+    path = tmp_path / "autotune_cache.json"
+    monkeypatch.setenv(autotune.CACHE_ENV + "_PATH", str(path))
+    monkeypatch.setattr(autotune, "_backend", lambda: "tpu")
+    monkeypatch.setattr(autotune, "sweep",
+                        lambda *a, **kw: 64)  # pretend the device sweep ran
+    monkeypatch.setattr(autotune, "_CACHE", {})
+    monkeypatch.setattr(autotune, "_PERSIST_LOADED", False)
+
+    assert autotune.autotuned_bm("cascade_bwd", 256, 4, bias=True) == 64
+    assert path.exists()
+
+    # fresh process: memo cleared, sweep would now answer differently —
+    # the persisted winner must be preferred (no re-sweep).
+    monkeypatch.setattr(autotune, "sweep", lambda *a, **kw: 128)
+    monkeypatch.setattr(autotune, "_CACHE", {})
+    monkeypatch.setattr(autotune, "_PERSIST_LOADED", False)
+    assert autotune.autotuned_bm("cascade_bwd", 256, 4, bias=True) == 64
+
+    # a different backend must NOT consume the file: non-TPU answers are
+    # the budget-derived fallback, never the persisted TPU winner.
+    from repro.kernels import acdc_cascade_bwd as cbwd_mod
+    monkeypatch.setattr(autotune, "_backend", lambda: "gpu")
+    monkeypatch.setattr(autotune, "_CACHE", {})
+    monkeypatch.setattr(autotune, "_PERSIST_LOADED", False)
+    fallback = cbwd_mod.pick_bm(256, 4, permute=False, bias=True)
+    assert fallback != 64
+    assert autotune.autotuned_bm("cascade_bwd", 256, 4, bias=True) == fallback
+
+    # kill switch: no load, no save.
+    monkeypatch.setenv(autotune.CACHE_ENV, "0")
+    monkeypatch.setattr(autotune, "_backend", lambda: "tpu")
+    monkeypatch.setattr(autotune, "sweep", lambda *a, **kw: 256)
+    monkeypatch.setattr(autotune, "_CACHE", {})
+    monkeypatch.setattr(autotune, "_PERSIST_LOADED", False)
+    path.unlink()
+    assert autotune.autotuned_bm("cascade_bwd", 256, 4, bias=True) == 256
+    assert not path.exists()
+
+
+def test_autotune_cpu_never_touches_persistent_cache(tmp_path, monkeypatch):
+    """CPU fallback answers must neither read nor write the device cache
+    (a persisted CPU constant would silently skip a real TPU sweep)."""
+    from repro.kernels import autotune
+
+    path = tmp_path / "autotune_cache.json"
+    path.write_text('{"backend": "tpu", "entries": {"fwd|512|1|float32|'
+                    'False|False": 32}}')
+    monkeypatch.setenv(autotune.CACHE_ENV + "_PATH", str(path))
+    monkeypatch.setattr(autotune, "_CACHE", {})
+    monkeypatch.setattr(autotune, "_PERSIST_LOADED", False)
+    assert jax.default_backend() != "tpu"
+    assert autotune.autotuned_bm("fwd", 512) == fused_mod.DEFAULT_BM  # not 32
 
 
 def test_autotune_sweep_executes_inside_jit_trace():
