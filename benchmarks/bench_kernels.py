@@ -31,6 +31,13 @@ Two views, written to ``results/BENCH_kernels.json``:
 The bench also snapshots ``ops.CASCADE_BWD_DISPATCHES`` and FAILS if a
 fused-regime cascade backward routed to the per-layer scan — the CI
 regression gate for the reverse-sweep dispatch.
+
+A ``paged_attn`` section benches the serving-side fused paged-attention
+kernel against the block-table gather on synthetic pool/table operands
+(decode T=1 and verify T=3 grids) at a FIXED live length across growing
+page tables, and asserts its analytic memory model: kernel bytes/slot a
+function of length only (flat in MB) while gather bytes/slot scale with
+MB, plus the same dispatch gate via ``ops.PAGED_ATTN_DISPATCHES``.
 """
 
 from __future__ import annotations
@@ -45,6 +52,7 @@ import jax.numpy as jnp
 from benchmarks._util import DEFAULT_TRIALS, time_us as _time, timing_meta
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import ops
+from repro.kernels import paged_attn
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -164,6 +172,111 @@ def bench_cascade_bwd(n: int, k: int, m: int, iters: int, trials: int,
     }
 
 
+def paged_attn_bytes_per_slot(mb: int, bs: int, hkv: int, dh: int,
+                              length: int, itemsize: int = 4) -> dict:
+    """Analytic per-slot per-layer K/V bytes for one attention tick."""
+    tok = hkv * dh * 2 * itemsize           # K and V
+    return {
+        "gather": mb * bs * tok,            # whole virtual row, any fill
+        "kernel": -(-length // bs) * bs * tok,  # mapped prefix pages only
+    }
+
+
+def bench_paged_attn(mb: int, t: int, iters: int, trials: int,
+                     non_roofline: bool) -> dict:
+    """Fused streaming kernel vs the block-table gather on synthetic
+    serving operands: ``b`` slot rows over an ``mb``-page table, live
+    length pinned at 2 pages so the streamed traffic is identical across
+    the mb sweep while the gather's grows."""
+    b, bs, hkv, group, dh = 4, 8, 4, 2, 32
+    length = 2 * bs
+    r = jax.random.PRNGKey(mb * 10 + t)
+    q = jax.random.normal(r, (b, t, hkv * group, dh))
+    knew = jax.random.normal(jax.random.fold_in(r, 1), (b, t, hkv, dh))
+    vnew = jax.random.normal(jax.random.fold_in(r, 2), (b, t, hkv, dh))
+    nb = b * mb
+    kp = jax.random.normal(jax.random.fold_in(r, 3), (nb + 1, bs, hkv, dh))
+    vp = jax.random.normal(jax.random.fold_in(r, 4), (nb + 1, bs, hkv, dh))
+    tbl = jnp.arange(nb, dtype=jnp.int32).reshape(b, mb)
+    pos = jnp.full((b,), length, jnp.int32)
+    win = jnp.int32(0)
+
+    was_forced = paged_attn.FORCE_FUSED
+    paged_attn.FORCE_FUSED = True
+    try:
+        blk = ops.paged_attn_route(hkv, dh, group, t, bs, jnp.float32)
+    finally:
+        paged_attn.FORCE_FUSED = was_forced
+    pc, bh = blk
+
+    fused = jax.jit(lambda *a: paged_attn.paged_attention(
+        *a, softcap=0.0, page_chunk=pc, head_block=bh,
+        interpret=non_roofline))
+
+    virtual = mb * bs
+
+    @jax.jit
+    def gather(q, knew, vnew, kp, vp, tbl, pos, win):
+        qpos = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        blk_i = jnp.minimum(qpos // bs, mb - 1)
+        phys = jnp.take_along_axis(tbl, blk_i, axis=1)
+        ok = jnp.logical_and(phys >= 0, qpos < virtual)
+        phys = jnp.where(ok, phys, nb)
+        kp = kp.at[phys, qpos % bs].set(knew)
+        vp = vp.at[phys, qpos % bs].set(vnew)
+        rt = jnp.where(tbl >= 0, tbl, 0)
+        ck = kp[rt].reshape(b, virtual, hkv, dh)
+        cv = vp[rt].reshape(b, virtual, hkv, dh)
+        kpos = jnp.arange(virtual, dtype=jnp.int32)[None, None, :]
+        mask = kpos <= qpos[:, :, None]
+        qg = q.reshape(b, t, hkv, group, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck) * dh ** -0.5
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv)
+        return o.reshape(b, t, hkv * group, dh), kp, vp
+
+    args = (q, knew, vnew, kp, vp, tbl, pos, win)
+    return {
+        "mb": mb, "t": t, "rows": b, "block_size": bs, "length": length,
+        "block": [pc, bh],
+        "non_roofline": non_roofline,
+        "fused_us": _time(fused, *args, iters=iters, trials=trials),
+        "gather_us": _time(gather, *args, iters=iters, trials=trials),
+        "bytes_per_slot": paged_attn_bytes_per_slot(mb, bs, hkv, dh,
+                                                    length),
+    }
+
+
+def _assert_paged_attn_claims(out: dict, dispatch_before: dict) -> None:
+    """Paged-attention acceptance gates, mirroring the cascade ones.
+
+    * analytic: kernel bytes/slot below gather's and CONSTANT across the
+      mb sweep (fixed length), gather bytes/slot growing with mb —
+      asserted on every backend;
+    * dispatch: every bench row must have routed fused, none to gather.
+    """
+    rows = out["paged_attn"]
+    kernel_bytes = {r["bytes_per_slot"]["kernel"] for r in rows}
+    assert len(kernel_bytes) == 1, (
+        f"kernel bytes/slot must be mb-independent: {kernel_bytes}")
+    by_mb = sorted({r["mb"]: r["bytes_per_slot"]["gather"]
+                    for r in rows}.items())
+    gather_bytes = [g for _, g in by_mb]
+    assert gather_bytes == sorted(gather_bytes) and \
+        gather_bytes[0] < gather_bytes[-1], (
+        f"gather bytes/slot must grow with mb: {by_mb}")
+    assert min(gather_bytes) > kernel_bytes.pop()
+
+    delta = {key: ops.PAGED_ATTN_DISPATCHES[key] - dispatch_before[key]
+             for key in ops.PAGED_ATTN_DISPATCHES}
+    out["paged_attn_dispatches"] = delta
+    if delta["fused"] < len(rows) or delta["gather"] > 0:
+        raise SystemExit(
+            "paged attention dispatch regressed to the gather path: "
+            f"{delta} over {len(rows)} benches")
+
+
 def _assert_cascade_bwd_claims(out: dict, dispatch_before: dict) -> None:
     """The acceptance checks this bench exists to gate.
 
@@ -236,6 +349,16 @@ def main(csv: bool = True, argv=None) -> dict:
     }
     _assert_cascade_bwd_claims(out, dispatch_before)
 
+    paged_dispatch_before = dict(ops.PAGED_ATTN_DISPATCHES)
+    paged_mbs = (4, 8) if args.quick else (4, 8, 16)
+    out["paged_attn"] = [bench_paged_attn(mb, t, iters, trials, interpret)
+                         for mb in paged_mbs for t in (1, 3)]
+    out["paged_attn_bytes_model"] = {
+        str(mb): paged_attn_bytes_per_slot(mb, 8, 4, 32, 16)
+        for mb in paged_mbs
+    }
+    _assert_paged_attn_claims(out, paged_dispatch_before)
+
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_kernels.json")
     with open(path, "w") as f:
@@ -264,6 +387,12 @@ def main(csv: bool = True, argv=None) -> dict:
                   f"{row['per_layer_scan_us']:.2f},"
                   f"bytes_row="
                   f"{row['roofline_bytes_per_row']['per_layer_scan']}")
+        for row in out["paged_attn"]:
+            print(f"kernels_paged_attn_mb{row['mb']}_t{row['t']},"
+                  f"{row['fused_us']:.2f},"
+                  f"gather_us={row['gather_us']:.2f};"
+                  f"bytes_slot={row['bytes_per_slot']['kernel']}"
+                  f"(gather={row['bytes_per_slot']['gather']})")
     return out
 
 

@@ -182,7 +182,11 @@ def make_serve_step(model, cfg, sample: str = "greedy",
 
     ``paged=True`` decodes against the paged block KV cache instead; the
     step signature gains the per-slot block tables:
-    ``step(params, cache, tokens, position, block_tables, rng)``.
+    ``step(params, cache, tokens, position, block_tables, rng)``.  Inside
+    the traced program, paged attention routes per ``ops.paged_attn_route``
+    — the fused streaming kernel (``kernels/paged_attn.py``) on TPU when a
+    block fits VMEM, the block-table gather otherwise — with identical
+    greedy streams either way.
     """
     from repro.serving import sampler as sampler_mod  # avoid import cycle
 
@@ -256,6 +260,12 @@ def make_verify_step(model, cfg, sample: str = "greedy",
     ``park`` is the engine's parked-row position sentinel (rows at or
     beyond it — free or stalled slots — commit zero tokens); ``None``
     treats every row as advancing.
+
+    ``paged=True`` verifies against the paged pool through the same
+    attention dispatch as the decode step: the fused paged-attention
+    kernel handles the k+1-query verify grid natively (one kernel body
+    for both T=1 and T=k+1), so speculative serving streams pages without
+    ever materialising the gathered virtual rows.
     """
     from repro.spec import verify as verify_mod  # avoid import cycle
 

@@ -22,6 +22,15 @@ Layout (per repo convention):
   VMEM budget includes the (K-1, bm, N) stash, so the row block shrinks
   with depth and ``ops.py`` falls back to the per-layer scan when no
   block fits.
+* ``paged_attn.py``         — fused paged-attention decode/verify kernel
+  for the serving engine: walks each slot's block table from SMEM,
+  DMA-streams only the mapped in-frontier K/V pages chunk-by-chunk
+  through double-width VMEM scratch, runs online-softmax per chunk with
+  the causal/window mask derived from ``position``, and scatters the new
+  token's K/V into the tail page in the same program (pool aliased
+  in-place).  One body serves both grids: decode (T=1) and speculative
+  verify (T=k+1).  The ``(B, virtual, Hkv, Dh)`` gather view is never
+  materialised.
 * ``scaled_matmul.py``      — blocked (m,n,k) scaled matmul kernel; the
   building block of every > ``MAX_FUSED_N`` regime.
 * ``autotune.py``           — first-call on-device row-block sweep
@@ -52,4 +61,21 @@ as batch-amortized)::
 The forward trajectory is the analogous 48N -> 8N*K -> 8N (whole-cascade
 fusion).  Together they put the full training step, not just inference,
 at the paper's section 5 roofline.
+
+Serving-side attention memory model, per slot per layer per tick (the
+trajectory BENCH_serve.json tracks; MB = pages per slot row, B = tokens
+per page, len = the slot's live length)::
+
+    block-table gather     MB * B * Hkv * Dh * 2 * itemsize   the whole
+                           virtual row, K and V, regardless of fill
+    fused streaming        ceil(len / B) * B * Hkv * Dh * 2 * itemsize
+                           only mapped in-frontier pages; parked and
+                           stalled rows cost zero
+
+i.e. gather traffic is O(max_len) per slot while the kernel's is O(len)
+— independent of how generously the page table is provisioned.  Routing
+lives in ``ops.paged_attn_route`` (counted in ``PAGED_ATTN_DISPATCHES``):
+fused on TPU (or when forced via ``REPRO_PAGED_ATTN=fused``) when an
+autotuned ``(page_chunk, head_block)`` fits the per-chunk VMEM budget,
+gather otherwise.
 """

@@ -22,7 +22,10 @@ Python int) shapes the traced kernel.
 
 Directions: ``fwd``/``bwd`` (per-layer kernels), ``cascade`` (fused
 forward), ``cascade_bwd`` (reverse-sweep backward; candidates filtered
-by its stash-inclusive VMEM budget).
+by its stash-inclusive VMEM budget), and ``paged_attn`` (the serving
+decode/verify kernel: candidates are (page_chunk, head_block) pairs
+packed into the cache's int slot via ``paged_attn.encode_block``,
+filtered by the kernel's per-chunk budget, keyed on (head_dim, T)).
 
 Sweep winners also persist across processes: real device sweeps are
 spilled to ``results/autotune_cache.json`` (keyed by backend —
@@ -34,6 +37,7 @@ file; ``REPRO_AUTOTUNE_CACHE_PATH`` relocates it.
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -47,6 +51,7 @@ from repro.kernels import acdc_bwd as bwd_mod
 from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
+from repro.kernels import paged_attn as paged_attn_mod
 
 #: candidate row blocks, smallest first (the sweep skips ones over budget)
 CANDIDATE_BMS = (64, 128, 256)
@@ -57,6 +62,13 @@ SWEEP_REPS = 3
 
 #: set to "0"/"off"/"false" to disable the on-disk sweep-result cache
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+#: representative serving dims for the ``paged_attn`` sweep — the cache
+#: key only carries (head_dim, T), so the sweep fixes the rest at the
+#: engine defaults; winners are clamped to the real call site's head
+#: count by ``paged_attn.clamp_block``
+_PAGED_SWEEP = {"hkv": 8, "group": 4, "bs": 16, "mb": 16, "rows": 8,
+                "pool": 128}
 
 _CACHE: Dict[Tuple, int] = {}
 _PERSIST_LOADED = False
@@ -75,6 +87,14 @@ def _fallback(direction: str, n: int, k: int, *, bias: bool,
     if direction == "cascade_bwd":
         bm = cascade_bwd_mod.pick_bm(n, k, permute=permute, bias=bias)
         return bm if bm is not None else cascade_bwd_mod.DEFAULT_BM
+    if direction == "paged_attn":
+        # key reuse: n = head_dim, k = T (decode 1 / verify k+1); the
+        # sweep's other dims are representative (clamped per call site)
+        blk = paged_attn_mod.pick_block(
+            hkv=_PAGED_SWEEP["hkv"], dh=n, group=_PAGED_SWEEP["group"],
+            t=k, bs=_PAGED_SWEEP["bs"], itemsize=4)
+        return paged_attn_mod.encode_block(
+            blk if blk is not None else paged_attn_mod.DEFAULT_BLOCK)
     raise ValueError(f"unknown direction {direction!r}")
 
 
@@ -90,6 +110,17 @@ def _candidates(direction: str, n: int, k: int, *, bias: bool,
                 if cascade_bwd_mod.cascade_bwd_vmem_bytes(
                     n, k, permute=permute, bias=bias,
                     bm=bm) <= cascade_mod.VMEM_BUDGET]
+    if direction == "paged_attn":
+        # page-chunk x head-block grid, encoded into the cache's int
+        # slot; budget is the kernel's per-chunk VMEM model
+        return [paged_attn_mod.encode_block((pc, bh))
+                for pc in paged_attn_mod.PAGE_CHUNKS
+                for bh in paged_attn_mod.HEAD_BLOCKS
+                if _PAGED_SWEEP["hkv"] % bh == 0
+                and paged_attn_mod.paged_attn_vmem_bytes(
+                    bs=_PAGED_SWEEP["bs"], dh=n,
+                    group=_PAGED_SWEEP["group"], t=k, pc=pc, bh=bh,
+                    itemsize=4) <= cascade_mod.VMEM_BUDGET]
     return list(CANDIDATE_BMS)
 
 
@@ -186,6 +217,8 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
     under ``ensure_compile_time_eval`` and the call goes through
     ``lower(...).compile()`` so both stay concrete when the sweep is
     first hit inside an enclosing ``jit`` trace."""
+    if direction == "paged_attn":
+        return _make_paged_runner(n, k, dtype, interpret=interpret)
     with jax.ensure_compile_time_eval():
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (SWEEP_ROWS, n), dtype)
@@ -226,6 +259,45 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
             jax.block_until_ready(compiled(*args))
 
         run.bm = bm
+        return run
+
+    return build
+
+
+def _make_paged_runner(dh: int, t: int, dtype, *,
+                       interpret: bool) -> Callable[[int], Callable[[], None]]:
+    """``build(encoded_block) -> run()`` for the paged-attention sweep:
+    one fused decode/verify dispatch on representative serving operands
+    (``_PAGED_SWEEP`` dims, rows mid-stream so pages actually stream)."""
+    dims = _PAGED_SWEEP
+    hkv, group, bs = dims["hkv"], dims["group"], dims["bs"]
+    rows, mb, pool = dims["rows"], dims["mb"], dims["pool"]
+    hq = hkv * group
+    with jax.ensure_compile_time_eval():
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (rows, t, hq, dh), dtype)
+        kn = jax.random.normal(jax.random.fold_in(key, 1),
+                               (rows, t, hkv, dh), dtype)
+        vn = jax.random.normal(jax.random.fold_in(key, 2),
+                               (rows, t, hkv, dh), dtype)
+        kp = jnp.zeros((pool + 1, bs, hkv, dh), dtype)
+        vp = jnp.zeros((pool + 1, bs, hkv, dh), dtype)
+        tbl = jnp.arange(rows * mb, dtype=jnp.int32).reshape(rows, mb) % pool
+        pos = jnp.full((rows,), (mb * bs) // 2, jnp.int32)
+        win = jnp.int32(0)
+        args = (q, kn, vn, kp, vp, tbl, pos, win)
+
+    def build(enc: int) -> Callable[[], None]:
+        pc, bh = paged_attn_mod.decode_block(enc)
+        fn = jax.jit(functools.partial(
+            paged_attn_mod.paged_attention, softcap=0.0, page_chunk=pc,
+            head_block=bh, interpret=interpret))
+        compiled = fn.lower(*args).compile()
+
+        def run() -> None:
+            jax.block_until_ready(compiled(*args))
+
+        run.bm = enc
         return run
 
     return build

@@ -51,6 +51,7 @@ from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import autotune
+from repro.kernels import paged_attn as paged_attn_mod
 from repro.kernels import scaled_matmul as smm_mod
 
 _INTERPRET = jax.default_backend() != "tpu"
@@ -61,6 +62,41 @@ _INTERPRET = jax.default_backend() != "tpu"
 #: ``per_layer_scan`` the HBM-remat fallback.  (Counts tracings, not
 #: dispatches — a jit cache hit re-runs the kernel without retracing.)
 CASCADE_BWD_DISPATCHES = {"reverse_sweep": 0, "per_layer_scan": 0}
+
+#: trace-time routing of the paged-attention decode/verify step, same
+#: contract as ``CASCADE_BWD_DISPATCHES``: ``fused`` is the block-table
+#: streaming kernel (``paged_attn.py``), ``gather`` the materialized
+#: ``k_pages[tbl]`` fallback kept for over-budget shapes and CPU
+#: interpret runs.
+PAGED_ATTN_DISPATCHES = {"fused": 0, "gather": 0}
+
+
+def paged_attn_route(hkv: int, dh: int, group: int, t: int, bs: int,
+                     dtype) -> Optional[tuple]:
+    """Trace-time dispatch for the paged-attention kernel.
+
+    Returns the ``(page_chunk, head_block)`` pair to run the fused
+    kernel with, or None to keep the gather fallback.  Policy mirrors
+    the cascade kernels: fused on real devices when a block fits the
+    per-chunk VMEM budget (block sizes from the autotune ``paged_attn``
+    direction, clamped to the call site's head count), gather on CPU
+    interpret runs — unless ``paged_attn.FORCE_FUSED`` is set, which
+    parity tests and benches use to drive the kernel in interpret mode.
+    Every trace increments exactly one ``PAGED_ATTN_DISPATCHES`` bucket.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    if not (paged_attn_mod.FORCE_FUSED or jax.default_backend() == "tpu"):
+        PAGED_ATTN_DISPATCHES["gather"] += 1
+        return None
+    enc = autotune.autotuned_bm("paged_attn", dh, t, dtype)
+    blk = paged_attn_mod.clamp_block(
+        paged_attn_mod.decode_block(enc), hkv=hkv, dh=dh, group=group,
+        t=t, bs=bs, itemsize=itemsize)
+    if blk is None:
+        PAGED_ATTN_DISPATCHES["gather"] += 1
+        return None
+    PAGED_ATTN_DISPATCHES["fused"] += 1
+    return blk
 
 
 def _flatten(x):

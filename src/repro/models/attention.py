@@ -17,6 +17,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+from repro.kernels import paged_attn as paged_attn_mod
 from repro.models import linear
 from repro.models.common import (
     ModelConfig,
@@ -268,6 +270,73 @@ def scatter_prefill_pages(
     return pages.at[:, phys_blocks].set(vals.astype(pages.dtype))
 
 
+def _attention_paged(
+    params: dict,
+    x: jax.Array,                   # (B, T, D); T=1 decode, T=k+1 verify
+    k_pages: jax.Array,             # (NB+1, bs, Hkv, Dh) — this layer's pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,        # (B, MB) int32, -1 = unmapped
+    position: jax.Array,            # (B,) first write index per row
+    window: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared paged decode/verify body — decode is the T=1 case.
+
+    The T new tokens' K/V is set-scattered into their tail pages
+    (``block_tables[b, pos // bs]``, offset ``pos % bs``); tokens whose
+    page is unmapped or whose position is at/beyond the virtual row
+    length (parked/stalled slots) write to the trash page instead.
+
+    Attention dispatches through ``ops.paged_attn_route`` (the single
+    call site for both grid shapes): in budget on a real device — or
+    under ``paged_attn.FORCE_FUSED`` — the fused Pallas kernel walks the
+    block table and streams only mapped, in-frontier pages (O(len)
+    bytes/slot); otherwise this gather fallback materializes the
+    ``(B, MB*bs, ...)`` virtual view page-wise through the table
+    (unmapped entries read page 0, whose stale contents sit beyond the
+    causal frontier and are masked) and runs plain SDPA.  Greedy streams
+    are identical either way (pinned by tests/test_paged_attention.py).
+    """
+    b, t, _ = x.shape
+    n_pages, bs = k_pages.shape[0], k_pages.shape[1]
+    mb = block_tables.shape[1]
+    virtual = mb * bs
+    dh = cfg.head_dim_
+    q, k, v = _project_qkv(params, x, x, cfg)
+    pos = position[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B,T)
+    q = apply_rope(q, pos, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_fraction, cfg.rope_theta)
+
+    blk = ops.paged_attn_route(cfg.n_kv_heads, dh,
+                               cfg.n_heads // cfg.n_kv_heads, t, bs,
+                               k_pages.dtype)
+    if blk is not None:
+        pc, bh = blk
+        out, k_pages, v_pages = paged_attn_mod.paged_attention(
+            q, k, v, k_pages, v_pages, block_tables, position, window,
+            softcap=cfg.attn_logit_softcap, page_chunk=pc, head_block=bh,
+            interpret=ops._INTERPRET)
+    else:
+        blk_idx = jnp.minimum(pos // bs, mb - 1)                       # (B,T)
+        phys = jnp.take_along_axis(block_tables, blk_idx, axis=1)      # (B,T)
+        writable = jnp.logical_and(phys >= 0, pos < virtual)
+        phys = jnp.where(writable, phys, n_pages - 1)                  # sink
+        off = pos % bs
+        k_pages = k_pages.at[phys, off].set(k.astype(k_pages.dtype))
+        v_pages = v_pages.at[phys, off].set(v.astype(v_pages.dtype))
+
+        tbl = jnp.where(block_tables >= 0, block_tables, 0)            # (B,MB)
+        ck = k_pages[tbl].reshape(b, virtual, *k_pages.shape[2:])
+        cv = v_pages[tbl].reshape(b, virtual, *v_pages.shape[2:])
+        k_pos = jnp.arange(virtual, dtype=jnp.int32)[None, :]
+        mask = causal_window_mask(pos, k_pos, window)                  # (B,T,V)
+        out = _sdpa(q, ck, cv, mask, cfg)
+    out = out.reshape(b, t, cfg.n_heads * dh)
+    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
+                              cfg.d_model, cfg, "attn_out")
+    return out, k_pages, v_pages
+
+
 def attention_decode_paged(
     params: dict,
     x: jax.Array,                   # (B, 1, D)
@@ -278,44 +347,10 @@ def attention_decode_paged(
     window: jax.Array,
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Paged twin of :func:`attention_decode`.
-
-    The new token's K/V is scattered with ``set`` into its slot in the
-    tail page (``block_tables[b, position // bs]``, offset
-    ``position % bs``); rows whose tail page is unmapped or whose position
-    is at/beyond the virtual row length (parked or stalled slots) write to
-    the trash page instead.  K/V for attention is gathered page-wise
-    through the block table; unmapped entries read page 0, whose stale
-    contents sit beyond the causal frontier and are masked.
-    """
-    b = x.shape[0]
-    n_pages, bs = k_pages.shape[0], k_pages.shape[1]
-    mb = block_tables.shape[1]
-    virtual = mb * bs
-    q, k, v = _project_qkv(params, x, x, cfg)
-    pos2 = position[:, None]  # (B,1)
-    q = apply_rope(q, pos2, cfg.rope_fraction, cfg.rope_theta)
-    k = apply_rope(k, pos2, cfg.rope_fraction, cfg.rope_theta)
-
-    blk_idx = jnp.minimum(position // bs, mb - 1)
-    phys = block_tables[jnp.arange(b), blk_idx]                 # (B,)
-    writable = jnp.logical_and(phys >= 0, position < virtual)
-    phys = jnp.where(writable, phys, n_pages - 1)               # sink
-    off = position % bs
-    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
-
-    tbl = jnp.where(block_tables >= 0, block_tables, 0)         # (B, MB)
-    ck = k_pages[tbl].reshape(b, virtual, *k_pages.shape[2:])
-    cv = v_pages[tbl].reshape(b, virtual, *v_pages.shape[2:])
-    k_pos = jnp.arange(virtual, dtype=jnp.int32)[None, :]
-    mask = causal_window_mask(pos2, k_pos, window)              # (B, 1, V)
-    out = _sdpa(q, ck, cv, mask, cfg)
-    dh = cfg.head_dim_
-    out = out.reshape(b, 1, cfg.n_heads * dh)
-    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
-                              cfg.d_model, cfg, "attn_out")
-    return out, k_pages, v_pages
+    """Paged twin of :func:`attention_decode`: the T=1 grid shape of
+    :func:`_attention_paged`."""
+    return _attention_paged(params, x, k_pages, v_pages, block_tables,
+                            position, window, cfg)
 
 
 def attention_verify(
@@ -368,42 +403,17 @@ def attention_verify_paged(
     window: jax.Array,
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Paged twin of :func:`attention_verify`.
+    """Paged twin of :func:`attention_verify`: the T=k+1 grid shape of
+    :func:`_attention_paged`.
 
-    Each of the T tokens' K/V is set-scattered through the block table
-    (the engine pre-maps pages for the whole verify window, or parks the
-    row); unmapped or parked positions route to the trash page.  Rollback
-    is a position rewind plus returning over-mapped tail pages — page
-    contents are never cleaned, exactly like the single-token decode path.
+    The engine pre-maps pages for the whole verify window
+    (``ensure_range``) or parks the row; unmapped or parked positions
+    route to the trash page.  Rollback is a position rewind plus
+    returning over-mapped tail pages — page contents are never cleaned,
+    exactly like the single-token decode path.
     """
-    b, t, _ = x.shape
-    n_pages, bs = k_pages.shape[0], k_pages.shape[1]
-    mb = block_tables.shape[1]
-    virtual = mb * bs
-    q, k, v = _project_qkv(params, x, x, cfg)
-    pos = position[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B,T)
-    q = apply_rope(q, pos, cfg.rope_fraction, cfg.rope_theta)
-    k = apply_rope(k, pos, cfg.rope_fraction, cfg.rope_theta)
-
-    blk_idx = jnp.minimum(pos // bs, mb - 1)                           # (B,T)
-    phys = jnp.take_along_axis(block_tables, blk_idx, axis=1)          # (B,T)
-    writable = jnp.logical_and(phys >= 0, pos < virtual)
-    phys = jnp.where(writable, phys, n_pages - 1)                      # sink
-    off = pos % bs
-    k_pages = k_pages.at[phys, off].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v.astype(v_pages.dtype))
-
-    tbl = jnp.where(block_tables >= 0, block_tables, 0)                # (B,MB)
-    ck = k_pages[tbl].reshape(b, virtual, *k_pages.shape[2:])
-    cv = v_pages[tbl].reshape(b, virtual, *v_pages.shape[2:])
-    k_pos = jnp.arange(virtual, dtype=jnp.int32)[None, :]
-    mask = causal_window_mask(pos, k_pos, window)                      # (B,T,V)
-    out = _sdpa(q, ck, cv, mask, cfg)
-    dh = cfg.head_dim_
-    out = out.reshape(b, t, cfg.n_heads * dh)
-    out = linear.linear_apply(params["wo"], out, cfg.n_heads * dh,
-                              cfg.d_model, cfg, "attn_out")
-    return out, k_pages, v_pages
+    return _attention_paged(params, x, k_pages, v_pages, block_tables,
+                            position, window, cfg)
 
 
 def attention_decode(

@@ -44,6 +44,31 @@ request's worst-case memory.  The device layout (shared with
   ``-1`` when unmapped.  The host-side :class:`BlockAllocator` owns it and
   the engine ships it to the device each tick.
 
+The table carries two invariants the attention consumers rely on:
+
+* **frontier** — for any slot the engine decodes at ``position = p <
+  virtual`` (virtual = ``ceil(max_len / B) * B``), every entry covering
+  ``[0, p]`` is mapped: ``_ensure_blocks`` maps the tick's whole write
+  window up front and *parks* (stalls) any slot it cannot serve at
+  ``position = virtual``.  Unmapped entries therefore only ever sit
+  ABOVE a live slot's frontier.
+* **masking** — readers must derive their key mask from ``position``
+  alone, never from table occupancy: pages are recycled across requests
+  (evict -> admit remaps them to other slots mid-stream), so a freed
+  page holds stale K/V that only the causal/frontier mask keeps out of
+  attention (pinned by tests/test_paged_attention.py).
+
+Two interchangeable attention consumers honour that contract
+(``ops.paged_attn_route`` picks per trace, counting decisions in
+``PAGED_ATTN_DISPATCHES``): the block-table *gather* in
+``models/attention.py`` — materialises the ``(n_slots, virtual, Hkv,
+Dh)`` view, routing unmapped entries through page 0 (masked anyway) —
+and the fused Pallas kernel in ``kernels/paged_attn.py``, which streams
+only the mapped in-frontier pages (O(len) bytes per slot instead of the
+gather's O(max_len)) and is the TPU default whenever an autotuned block
+fits VMEM; the gather stays as the over-budget/interpret fallback.
+Greedy streams are bit-identical either way.
+
 Admission contract: the FIFO head is admitted only when
 ``ceil((prompt_len + 1) / B)`` pages are free — prompt plus room for the
 first decode token — so admission never strands a request with nowhere to

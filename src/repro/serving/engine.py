@@ -171,7 +171,8 @@ class Engine:
                       "tokens_out": 0, "finished": 0, "preempted": 0,
                       "stalled_slot_ticks": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
-                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
+                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0,
+                      "attn_gather_bytes": 0, "attn_kernel_bytes": 0}
 
         self.spec_k = spec_k
         self.draft = None
@@ -209,6 +210,40 @@ class Engine:
         if self.draft is not None:
             total += self.draft.cache_bytes
         return total
+
+    def _attn_bytes_tick(self, pos: np.ndarray) -> None:
+        """Analytic attention K/V traffic for one paged decode/verify tick,
+        accumulated into ``stats`` (model, not a measurement):
+
+        * ``attn_gather_bytes`` — what the block-table *gather* path reads:
+          every K/V page pool is materialised as a ``(n_slots, virtual,
+          Hkv, Dh)`` view, so each layer costs ``n_slots * virtual`` tokens
+          regardless of how full any row is (O(max_blocks * block_size)
+          per slot).
+        * ``attn_kernel_bytes`` — what the fused streaming kernel reads:
+          per live row, only the mapped prefix ``ceil(pos / block_size)``
+          pages; parked and stalled rows cost nothing.  Window narrowing
+          and the chunk-granularity round-up are ignored, so this is a
+          slight over-estimate for sliding-window layers.
+
+        Both counters advance every paged tick whichever path actually
+        ran, so fused and gather runs of the same trace report identical
+        numbers and the ratio is a pure memory-model statement.
+        """
+        gather = kernel = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._cache)[0]:
+            if not any("pages" in str(k) for k in path):
+                continue
+            n_layers, bs = leaf.shape[0], leaf.shape[2]
+            tok_bytes = int(np.prod(leaf.shape[3:])) * leaf.dtype.itemsize
+            gather += n_layers * self.n_slots * self._virtual * tok_bytes
+            for p in pos:
+                p = int(p)
+                if p < self._virtual:
+                    kernel += n_layers * (-(-p // bs) * bs) * tok_bytes
+        self.stats["attn_gather_bytes"] += gather
+        self.stats["attn_kernel_bytes"] += kernel
 
     def _decode_rng(self, tick: int) -> jax.Array:
         return jax.random.fold_in(self._rng_decode, tick)
@@ -264,6 +299,7 @@ class Engine:
                 pos = self._positions.copy()
                 for slot in self._stalled:
                     pos[slot] = self._park  # no write, no token this tick
+                self._attn_bytes_tick(pos)
                 tok, self._cache = self._decode(
                     self.params, self._cache, jnp.asarray(self._tokens),
                     jnp.asarray(pos), jnp.asarray(self.allocator.table), rng)
@@ -301,6 +337,8 @@ class Engine:
         pos = self._positions.copy()
         for slot in self._stalled:
             pos[slot] = self._park  # no writes, no tokens this tick
+        if self.paged:
+            self._attn_bytes_tick(pos)
 
         t0 = time.perf_counter()
         drafts, draft_logits = self.draft.propose(self._tokens, pos,
