@@ -188,7 +188,7 @@ def bench_continuous(model, cfg, params, n_slots: int, prompt_len: int,
         nxt = 0
         tick = 0
         limit = n_requests * (prompt_len + gen) + 64
-        while nxt < n_requests or eng.scheduler.has_work:
+        while nxt < n_requests or eng.has_work:
             while nxt < n_requests and arrive_at[nxt] <= tick:
                 eng.submit(reqs[nxt])
                 nxt += 1
@@ -280,6 +280,95 @@ def pool_blocks_for_mix(reqs, n_slots: int, prompt_len: int, gen: int,
     return sum(demands[:n_slots])
 
 
+def bench_overload(args):
+    """Overload mode (``--overload``): the page pool is sized to ~60% of
+    the workload mix's demand, arrivals come in faster than the engine
+    drains (jittered Poisson gaps), and half the stream carries deadlines
+    across three priority bands — so the resilience machinery, not the
+    steady-state path, carries the run: admissions gate, slots stall,
+    deadlocks break by preempt-and-requeue, queued SLOs time out, and the
+    degradation ladder may bound the queue.
+
+    Reports p50/p99 TTFT over requests that got a first token plus the
+    preempt / requeue / timeout / shed counters, and asserts the
+    overload guarantees: every request reaches a terminal state, NO
+    request is killed with ``cache_full`` (the seed's behaviour when the
+    pool deadlocked — requeue-with-recompute replaces it), and the page
+    pool comes back leak-free.
+    """
+    cfg = registry.get_smoke_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    n, gen = args.requests, args.gen
+    reqs = make_ragged_requests(
+        cfg.vocab_size, n, args.prompt_len, gen, seed=2, vary_budget=True,
+        deadline_range=(2.0, 10.0), deadline_frac=0.5, n_priorities=3)
+    demand = pool_blocks_for_mix(reqs, args.slots, args.prompt_len, gen,
+                                 args.block_size)
+    # max_prompt_len covers prompt + full generation so ANY active request
+    # can re-prefill after preemption: under overload the engine must
+    # always be able to trade latency instead of killing streams
+    max_prompt = args.prompt_len + gen
+    min_pool = -(-(max_prompt + 1) // args.block_size)
+    pool = max(min_pool, int(0.6 * demand))
+    eng = Engine(model, cfg, params, n_slots=args.slots,
+                 max_len=max_prompt + 1, max_prompt_len=max_prompt,
+                 paged=True, block_size=args.block_size, n_blocks=pool)
+    warm = Request(rid=10**6, prompt=[1, 2, 3], max_new_tokens=2)
+    eng.run([warm], max_ticks=50)
+
+    # arrivals ~2x faster than the continuous bench: sustained overload
+    rs = np.random.RandomState(4)
+    gaps = rs.exponential(scale=max(gen / (4 * args.slots), 0.25), size=n)
+    arrive_at = np.floor(np.cumsum(gaps)).astype(int)
+    t0 = time.perf_counter()
+    nxt = 0
+    tick = 0
+    limit = 4 * n * (args.prompt_len + gen) + 256
+    while nxt < n or eng.has_work:
+        while nxt < n and arrive_at[nxt] <= tick:
+            eng.submit(reqs[nxt])
+            nxt += 1
+        eng.tick()
+        tick += 1
+        if tick > limit:
+            raise RuntimeError("overload run not drained")
+    dt = time.perf_counter() - t0
+
+    assert all(r.done for r in reqs), "request left non-terminal"
+    reasons = {}
+    for r in reqs:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    assert reasons.get("cache_full", 0) == 0, (
+        "overload killed a stream with cache_full — preempt-requeue "
+        "should have recomputed it")
+    eng.allocator.audit()
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+
+    served = [r.t_first_token - r.t_submit for r in reqs
+              if r.t_first_token is not None]
+    row = {
+        "mode": "overload",
+        "n_requests": n,
+        "pool_blocks": pool,
+        "pool_vs_demand": pool / max(demand, 1),
+        "finish_reasons": reasons,
+        "ttft_p50_s": float(np.percentile(served, 50)) if served else None,
+        "ttft_p99_s": float(np.percentile(served, 99)) if served else None,
+        "preempted": eng.stats["preempted"],
+        "requeued": eng.stats["requeued"],
+        "deadline_preempts": eng.stats["deadline_preempts"],
+        "timeout": eng.stats["timeout"],
+        "rejected": eng.stats["rejected"],
+        "stalled_slot_ticks": eng.stats["stalled_slot_ticks"],
+        "degrade_down": eng.stats["degrade_down"],
+        "degrade_up": eng.stats["degrade_up"],
+        "tokens_out": sum(len(r.generated) for r in reqs),
+        "total_s": dt,
+    }
+    return row
+
+
 def bench_spec(args):
     """Speculative vs non-speculative on an ACDC SELL smoke model.
 
@@ -326,7 +415,35 @@ def main(csv: bool = True, argv=None):
                          "draft) against the continuous baseline on an "
                          "ACDC SELL smoke model")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--overload", action="store_true",
+                    help="run ONLY the overload-resilience benchmark: pool "
+                         "below the mix's demand, jittered Poisson "
+                         "arrivals, deadlines + priorities; reports "
+                         "p50/p99 TTFT and preempt/requeue/timeout/shed "
+                         "counts and asserts zero cache_full kills")
     args = ap.parse_args(argv)
+
+    if args.overload:
+        row = bench_overload(args)
+        os.makedirs(RESULTS, exist_ok=True)
+        path = os.path.join(RESULTS, "BENCH_serve_overload.json")
+        out = {"backend": jax.default_backend(),
+               "timing": timing_meta(1, 1),
+               "arch": args.arch, "slots": args.slots,
+               "prompt_len": args.prompt_len, "gen": args.gen,
+               "block_size": args.block_size, "overload": row}
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        if csv:
+            fr = ";".join(f"{k}:{v}" for k, v in
+                          sorted(row["finish_reasons"].items()))
+            print(f"serve_overload,{row['total_s'] * 1e6:.0f},"
+                  f"ttft_p50_s={row['ttft_p50_s']:.3f};"
+                  f"ttft_p99_s={row['ttft_p99_s']:.3f};"
+                  f"requeued={row['requeued']};timeout={row['timeout']};"
+                  f"rejected={row['rejected']};reasons={fr}")
+            print(f"wrote {os.path.relpath(path)}")
+        return out
 
     cfg = registry.get_smoke_config(args.arch)
     model = get_model(cfg)

@@ -49,6 +49,14 @@ class StragglerMonitor:
     shift, re-seeds the baseline from it and stops flagging — otherwise a
     legitimate workload change (longer sequence bucket, new data shard)
     would freeze the baseline and flag every step forever.
+
+    Besides training steps, the serving engine reuses this as its
+    tick-latency watchdog: straggling ticks are one of the pressure
+    signals that drive the graceful-degradation ladder
+    (:mod:`repro.serving.engine`), which calls :meth:`reset` on every
+    ladder transition — the tick cost legitimately changes with the
+    serving level, so the old baseline must not flag (or mask) the new
+    one.
     """
 
     def __init__(self, alpha: float = 0.1, factor: float = 3.0,
@@ -59,6 +67,15 @@ class StragglerMonitor:
         self.adapt_after = adapt_after
         self.ewma: Optional[float] = None
         self.flagged: List[int] = []
+        self._count = 0
+        self._consecutive = 0
+
+    def reset(self) -> None:
+        """Drop the baseline after a legitimate level shift (e.g. a
+        serving degradation-ladder transition changed the per-tick cost);
+        the next observation re-seeds the EWMA.  ``flagged`` history is
+        kept — it is an audit log, not part of the baseline."""
+        self.ewma = None
         self._count = 0
         self._consecutive = 0
 

@@ -100,18 +100,30 @@ def run_engine(model, cfg, params, args, rng):
               f"pool={eng.allocator.n_blocks} blocks "
               f"(dense parity {args.slots * eng.max_blocks}) | "
               f"cache {eng.cache_bytes / 1e6:.2f} MB")
+    deadline_range = None
+    if args.deadline_s is not None:
+        deadline_range = (args.deadline_s, args.deadline_s)
     reqs = make_ragged_requests(cfg.vocab_size, args.requests,
-                                args.prompt_len, args.gen)
+                                args.prompt_len, args.gen,
+                                deadline_range=deadline_range,
+                                deadline_frac=args.deadline_frac,
+                                n_priorities=args.priorities)
     if cfg.family == "encdec":
         for req in reqs:
             req.frontend_embeds = _make_frontend(
                 cfg, jax.random.fold_in(jax.random.PRNGKey(7), req.rid), 1)
 
     t0 = time.time()
-    eng.run(reqs, max_ticks=args.requests * (args.prompt_len + args.gen) + 64)
+    eng.run(reqs,
+            max_ticks=4 * args.requests * (args.prompt_len + args.gen) + 64,
+            wall_clock_limit_s=args.wall_clock_limit_s)
     dt = time.time() - t0
+    if eng.wall_clock_exceeded:
+        print(f"[engine] WALL CLOCK LIMIT ({args.wall_clock_limit_s}s) hit: "
+              f"partial results")
     toks = eng.stats["tokens_out"]
-    ttft = [r.t_first_token - r.t_submit for r in reqs]
+    ttft = [r.t_first_token - r.t_submit for r in reqs
+            if r.t_first_token is not None]
     print(f"[engine] {len(reqs)} ragged requests | "
           f"{eng.stats['prefill_dispatches']} prefill dispatches | "
           f"{eng.stats['decode_ticks']} decode ticks | "
@@ -121,6 +133,14 @@ def run_engine(model, cfg, params, args, rng):
               f"{eng.allocator.n_blocks} blocks in use | "
               f"{eng.stats['stalled_slot_ticks']} stalled slot-ticks | "
               f"{eng.stats['preempted']} preempted")
+    s = eng.stats
+    if (s["requeued"] or s["timeout"] or s["rejected"]
+            or s["degrade_down"]):
+        print(f"[resilience] {s['requeued']} requeued "
+              f"({s['deadline_preempts']} for deadlines) | "
+              f"{s['timeout']} timed out | {s['rejected']} shed | "
+              f"ladder down/up {s['degrade_down']}/{s['degrade_up']} "
+              f"(now {eng.degrade_level})")
     if args.spec:
         print(f"[spec] {eng.stats['accepted']}/{eng.stats['drafted']} "
               f"drafts accepted (rate "
@@ -128,7 +148,9 @@ def run_engine(model, cfg, params, args, rng):
               f"{eng.stats['decode_ticks']} verify dispatches for "
               f"{toks} tokens "
               f"({toks / max(eng.stats['decode_ticks'], 1):.2f} tok/dispatch)")
-    print(f"[engine] ttft p50 {np.median(ttft):.3f}s max {max(ttft):.3f}s")
+    if ttft:
+        print(f"[engine] ttft p50 {np.median(ttft):.3f}s "
+              f"max {max(ttft):.3f}s")
     print("sample generations (token ids):")
     for r in reqs[:2]:
         print(f"   rid={r.rid} len={r.prompt_len} "
@@ -173,6 +195,19 @@ def main(argv=None):
     ap.add_argument("--spec-skip-layers", type=int, default=0,
                     help="also drop this many top transformer blocks "
                          "from the draft (decoder families)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="give a fraction of requests this latency SLO; "
+                         "admission turns earliest-deadline-first and "
+                         "requests past the deadline finish as timeouts")
+    ap.add_argument("--deadline-frac", type=float, default=0.5,
+                    help="fraction of requests carrying --deadline-s")
+    ap.add_argument("--priorities", type=int, default=1,
+                    help="priority bands drawn uniformly per request "
+                         "(ties in deadline order; shed order under "
+                         "overload)")
+    ap.add_argument("--wall-clock-limit-s", type=float, default=None,
+                    help="hard bound on the serve loop's real time; exits "
+                         "with partial results instead of hanging")
     args = ap.parse_args(argv)
     if args.paged and args.static:
         ap.error("--paged applies to the engine path, not --static")

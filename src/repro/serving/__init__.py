@@ -8,15 +8,95 @@ SSM/conv state in ``repro/models/mamba2.py``) into an engine.
 
 Request lifecycle
 -----------------
-A :class:`Request` (``request.py``) carries a ragged-length prompt plus its
-stop conditions (``eos_id``, ``max_new_tokens``).  ``Engine.submit``
-validates it and hands it to the FIFO :class:`Scheduler` (``scheduler.py``)
-as QUEUED.  When a batch slot frees up it becomes ACTIVE: one lowered
-**prefill** program (``make_prefill_step``) runs the whole prompt, scatters
-the resulting KV / SSM state into the slot's cache row, and samples the
-first token — the time-to-first-token mark.  Each subsequent engine tick
-advances it one token; EOS / token-budget / cache-ceiling stops flip it to
-FINISHED (``finish_reason``) and release the slot.
+A :class:`Request` (``request.py``) carries a ragged-length prompt, its
+stop conditions (``eos_id``, ``max_new_tokens``), and its scheduling
+inputs (``deadline_s``, ``priority``, ``max_preemptions``).
+``Engine.submit`` validates it and hands it to the deadline-aware
+:class:`Scheduler` (``scheduler.py``) as QUEUED.  When a batch slot frees
+up it becomes ACTIVE: one lowered **prefill** program
+(``make_prefill_step``) runs the whole context, scatters the resulting
+KV / SSM state into the slot's cache row, and samples the next token —
+the time-to-first-token mark on first admission.  Each subsequent engine
+tick advances it one token; a terminal condition flips it to FINISHED
+and releases the slot.  ``finish_reason`` is one of the closed
+:class:`FinishReason` set:
+
+* ``"eos"`` — generated the request's ``eos_id``;
+* ``"length"`` — generated ``max_new_tokens`` tokens;
+* ``"cache_full"`` — hit the per-slot ``max_len`` cache ceiling, or was
+  terminally evicted while its context was too long to re-prefill;
+* ``"timeout"`` — passed ``t_submit + deadline_s`` (queued or active);
+* ``"preempted_limit"`` — needed another preemption after exhausting its
+  ``max_preemptions`` requeue budget;
+* ``"rejected"`` — shed at submission by the degradation ladder's
+  bounded queue (overload; lowest priority goes first).
+
+Preempt -> requeue -> re-prefill
+--------------------------------
+Preemption is the engine's universal recovery move: the victim slot is
+released (pages returned to the pool), the request moves ACTIVE ->
+QUEUED with its ``generated`` tokens kept, and after an exponential
+tick backoff (``2^(n_preemptions - 1)`` ticks, capped at 64) it
+re-enters the queue with its original arrival ``seq`` — seniority and
+deadline urgency are unchanged.  Readmission re-prefills the whole
+context ``prompt + generated`` and samples the next token from the
+last-position logits; because prefill and decode agree
+position-for-position (pinned by tests/test_decode_consistency.py), a
+greedy stream continues **bit-identically** to an undisturbed run —
+recompute makes preemption transparent, trading only latency.  The same
+state machine serves four callers: the all-stalled deadlock breaker
+(pool exhausted), deadline preemption (a queued request about to miss
+its deadline evicts the active request with the most slack), corrupt-
+output healing (non-finite logits -> out-of-range sampled ids ->
+requeue instead of committing garbage), and the public
+``Engine.preempt(slot)`` hook (a multi-replica front door's
+drain-and-redistribute building block).  A request that cannot requeue
+(budget spent, or ``prompt + generated`` no longer fits
+``max_prompt_len``) is finished terminally instead
+(``preempted_limit`` / ``cache_full``).
+
+Deadline-aware scheduling
+-------------------------
+Admission order is earliest-deadline-first: queued requests sort by
+absolute deadline (no deadline sorts last), then priority, then arrival
+— exactly FIFO when no deadlines or priorities are set.  Each tick
+sweeps queued requests already past their deadline to ``timeout``
+without burning a prefill, and evicts active ones on expiry.  A
+capacity-blocked queue head is aged (``scheduler.py``): after
+``age_limit`` skipped passes the scheduler admits nobody else, so freed
+capacity accrues until the head fits — bounding head-of-line starvation
+that the bounded lookahead ``window`` alone could sustain forever.
+
+Graceful-degradation ladder
+---------------------------
+A tick-latency watchdog (:class:`repro.dist.elastic.StragglerMonitor`)
+plus pool-pressure (all slots stalled on a dry pool) and queue-depth
+signals drive a reversible ladder: ``full -> spec_half -> spec_off ->
+shed`` (speculation rungs exist only when ``spec_k`` allows).  Each
+step down shrinks speculative depth, then disables speculation, then
+bounds the admission queue at ``queue_bound`` and sheds the lowest-
+priority request (``finish_reason="rejected"``).  Ordering guarantees:
+rungs are strictly ordered cheapest-first; transitions are counted in
+``stats["degrade_down"/"degrade_up"/"degrade_level"]``; and **no
+transition ever alters a greedy token stream** — speculation is exact
+at any depth (including 0) and shedding only drops whole requests at
+submission, never tokens from streaming ones.  After
+``degrade_up_after`` consecutive calm ticks the engine steps back up;
+the watchdog baseline resets on every transition because the per-tick
+cost legitimately changed.
+
+Fault injection
+---------------
+``Engine(..., fault=FaultPlan(seed=...))`` (``faults.py``) threads a
+deterministic seed-driven chaos schedule behind a no-op default into
+the allocator (capacity checks / page mapping report a dry pool) and
+the tick loop (non-finite logits on chosen ticks, simulated slow ticks
+for the watchdog, spurious slot stalls).  Each fault surface draws from
+its own seeded stream, so plans replay exactly;
+``BlockAllocator.audit()`` must come back clean after any plan
+(tests/test_serving_faults.py replays seeded chaos and asserts every
+request reaches a terminal state with unpreempted streams
+bit-identical).
 
 Slot model
 ----------
@@ -69,13 +149,14 @@ gather's O(max_len)) and is the TPU default whenever an autotuned block
 fits VMEM; the gather stays as the over-budget/interpret fallback.
 Greedy streams are bit-identical either way.
 
-Admission contract: the FIFO head is admitted only when
+Admission contract: the queue head is admitted only when
 ``ceil((prompt_len + 1) / B)`` pages are free — prompt plus room for the
 first decode token — so admission never strands a request with nowhere to
 write.  Decode growth maps pages lazily each tick; a slot the pool cannot
 serve *stalls* (parks for the tick, produces nothing, resumes when an
-eviction frees pages), and an all-stalled deadlock is broken by evicting
-the stalled request holding the most pages.  Because slots are compute-
+eviction frees pages), and an all-stalled deadlock is broken by
+preempting-with-requeue the lowest-priority stalled request holding the
+most pages (see the state machine above).  Because slots are compute-
 isolated, greedy output streams under paging are identical to the dense
 cache (pinned by tests/test_serving_paged.py); only scheduling/latency
 can shift when the pool is tight.  Families: transformer and encdec page
@@ -144,7 +225,12 @@ from repro.dist.steps import (  # noqa: F401
 )
 from repro.serving.blocks import BlockAllocator  # noqa: F401
 from repro.serving.engine import Engine  # noqa: F401
-from repro.serving.request import Request, RequestStatus  # noqa: F401
+from repro.serving.faults import FaultPlan  # noqa: F401
+from repro.serving.request import (  # noqa: F401
+    FinishReason,
+    Request,
+    RequestStatus,
+)
 from repro.serving.sampler import (  # noqa: F401
     apply_top_k,
     apply_top_p,

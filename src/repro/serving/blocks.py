@@ -35,16 +35,23 @@ corrupting another slot's pages, and resumes once an eviction frees pages.
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 
 class BlockAllocator:
-    """Fixed-size block pool with a global free list and per-slot tables."""
+    """Fixed-size block pool with a global free list and per-slot tables.
+
+    ``fault`` (a :class:`repro.serving.faults.FaultPlan`, default None =
+    no-op) lets chaos tests make capacity checks and page mapping report a
+    dry pool even when pages are free — injected *before* any page is
+    handed out, so the allocator's own invariants (checkable any time via
+    :meth:`audit`) hold under any plan.
+    """
 
     def __init__(self, n_blocks: int, block_size: int, n_slots: int,
-                 max_blocks_per_slot: int):
+                 max_blocks_per_slot: int, fault: Optional[object] = None):
         if n_blocks < 1 or block_size < 1:
             raise ValueError("need at least one block of at least one token")
         if max_blocks_per_slot < 1:
@@ -53,6 +60,7 @@ class BlockAllocator:
         self.block_size = block_size
         self.n_slots = n_slots
         self.max_blocks_per_slot = max_blocks_per_slot
+        self.fault = fault
         #: physical index of the write-sink page (pool allocates one extra)
         self.trash = n_blocks
         # LIFO free list: recently freed pages are remapped first, which
@@ -77,6 +85,8 @@ class BlockAllocator:
 
     def can_admit(self, prompt_len: int) -> bool:
         """Enough free pages for the prompt plus the first decode token?"""
+        if self.fault is not None and self.fault.alloc_fail():
+            return False
         need = min(self.blocks_for(prompt_len + 1), self.max_blocks_per_slot)
         return self.n_free >= need
 
@@ -129,6 +139,8 @@ class BlockAllocator:
         a partially-mapped window would verify against trash).  Positions
         beyond the virtual row length are trash-routed and need no map.
         """
+        if self.fault is not None and self.fault.alloc_fail():
+            return False    # injected dry pool: caller stalls the slot
         newly: List[int] = []
         for pos in range(start, start + count):
             if pos >= self.max_blocks_per_slot * self.block_size:
@@ -172,6 +184,52 @@ class BlockAllocator:
             if blk not in self._held:
                 raise ValueError(f"block {blk} double-freed (slot {slot})")
             self._release(slot, idx)
+
+    # -- invariants --------------------------------------------------------
+
+    def audit(self) -> Dict[str, int]:
+        """Full-pool consistency check; raises AssertionError on the first
+        violation, returns a summary when clean.
+
+        Invariants (the ones every release path — evict, preempt-requeue,
+        ``trim_slot``, all-stalled deadlock eviction, ``ensure_range``
+        rollback — must preserve, asserted after every chaos run):
+
+        * the free list holds no duplicates and no held page;
+        * free + held partition exactly the ``n_blocks`` real pages
+          (no leaks out of the pool, no phantom pages into it);
+        * every mapped table entry is a real held page, mapped exactly
+          once across the whole table (no double-maps, no stale maps of
+          freed pages), and the trash page is never mapped;
+        * every held page is mapped somewhere (held-but-unmapped would be
+          a leak: unreachable until process exit).
+        """
+        free = list(self._free)
+        if len(free) != len(set(free)):
+            raise AssertionError("duplicate pages in the free list")
+        freeset = set(free)
+        if freeset & self._held:
+            raise AssertionError(
+                f"pages both free and held: {sorted(freeset & self._held)}")
+        universe = set(range(self.n_blocks))
+        if freeset | self._held != universe:
+            raise AssertionError(
+                f"pages leaked from the pool: "
+                f"{sorted(universe - freeset - self._held)}")
+        mapped = [int(b) for b in self.table.ravel() if b >= 0]
+        if len(mapped) != len(set(mapped)):
+            dup = sorted(b for b in set(mapped) if mapped.count(b) > 1)
+            raise AssertionError(f"pages double-mapped: {dup}")
+        bad = [b for b in mapped if b >= self.n_blocks or b < 0]
+        if bad:
+            raise AssertionError(f"table maps non-pool pages: {sorted(bad)}")
+        if set(mapped) != self._held:
+            raise AssertionError(
+                f"table/held mismatch: stale maps "
+                f"{sorted(set(mapped) - self._held)}, leaked holds "
+                f"{sorted(self._held - set(mapped))}")
+        return {"free": len(free), "held": len(self._held),
+                "mapped": len(mapped)}
 
     # -- device view -------------------------------------------------------
 

@@ -3,18 +3,18 @@
 The engine owns a fixed-shape cache with ``n_slots`` batch rows and runs a
 tick loop:
 
-1. **admit** — while a slot is free and requests are queued, the oldest
-   request is admitted: ONE lowered prefill program runs its whole
-   (right-padded) prompt, the resulting per-slot KV / SSM state is
-   scattered into the slot's cache row, and the first token is sampled
-   from the last-position logits (this is also the time-to-first-token
-   mark);
+1. **admit** — while a slot is free and requests are queued, the most
+   urgent request (earliest deadline, then priority, then arrival order)
+   is admitted: ONE lowered prefill program runs its whole (right-padded)
+   prompt, the resulting per-slot KV / SSM state is scattered into the
+   slot's cache row, and the first token is sampled from the
+   last-position logits (this is also the time-to-first-token mark);
 2. **decode** — one fused decode step advances EVERY active slot by one
    token; free slots ride along parked at the row length where the cache
    scatter writes nothing;
-3. **evict** — requests that hit EOS, their ``max_new_tokens`` budget, or
-   the cache ceiling release their slot immediately, so the next tick's
-   admission refills the batch.
+3. **evict** — requests that hit EOS, their ``max_new_tokens`` budget,
+   the cache ceiling, or their deadline release their slot immediately,
+   so the next tick's admission refills the batch.
 
 All shapes are static — prompts pad to ``max_prompt_len``, the decode batch
 is always ``n_slots`` wide — so the engine compiles exactly two programs
@@ -30,10 +30,35 @@ blocks for the prompt plus one decode token, decode growth maps pages
 lazily, and a slot whose next page cannot be mapped *stalls* (parks for
 the tick, producing nothing) until an eviction frees pages — so the pool
 can be sized for the traffic mix instead of ``n_slots * max_len`` while
-greedy output streams stay identical to the dense cache.  If every active
-slot is stalled at once the engine breaks the deadlock by evicting the
-stalled request holding the most pages (``finish_reason="cache_full"``,
-counted in ``stats["preempted"]``).
+greedy output streams stay identical to the dense cache.
+
+**Preemption with recompute**: when every active slot is stalled at once
+(deadlock), or a deadline demands the capacity, the victim slot's pages
+are released and the request is *requeued* — its generated-so-far tokens
+fold into the re-prefill context at readmission, so a greedy stream
+continues bit-identically to an undisturbed run (prefill and decode agree
+position-for-position; pinned by tests/test_serving_resilience.py).  A
+per-request ``max_preemptions`` budget with exponential tick backoff
+bounds the retries; past it the request finishes with
+``finish_reason="preempted_limit"``.  The same requeue path heals
+corrupt decode output (non-finite logits produce out-of-range sample
+ids, which the host-side validity guard catches).
+
+**Deadline-aware scheduling**: requests carry ``deadline_s`` / priority;
+admission is earliest-deadline-first with aging (see ``scheduler.py``),
+queued requests past their deadline are swept to
+``finish_reason="timeout"`` without burning a prefill, active ones are
+evicted on expiry, and a queued request about to miss its deadline may
+preempt-with-requeue the active request with the most slack.
+
+**Graceful degradation**: a tick-latency watchdog
+(:class:`repro.dist.elastic.StragglerMonitor`) plus pool-pressure and
+queue-depth signals drive a reversible ladder — shrink ``spec_k``, then
+disable speculation, then bound the admission queue and shed the
+lowest-priority arrivals (``finish_reason="rejected"``) — stepping back
+up after sustained calm.  Every transition and shed is counted in
+``stats``; ladder moves never change greedy token streams (speculation
+is exact and shedding only drops whole requests).
 
 Speculative mode (``spec_k > 0``) replaces the one-token decode tick with
 draft -> verify -> accept/rollback: a cheap draft source
@@ -44,21 +69,27 @@ target verify program scores and commits them
 its accepted length — variable per slot, shapes static via masking.
 Greedy streams stay bit-identical to the non-speculative engine; see
 :mod:`repro.serving` for the tick contract.
+
+Fault injection (``fault=FaultPlan(...)``) threads a deterministic
+seed-driven chaos schedule behind a no-op default into the allocator and
+the tick loop; see :mod:`repro.serving.faults`.
 """
 
 from __future__ import annotations
 
 import functools
 import time
-from typing import List, Optional, Sequence, Set
+from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.dist import steps as steps_mod
+from repro.dist.elastic import StragglerMonitor
 from repro.serving import sampler as sampler_mod
 from repro.serving.blocks import BlockAllocator
+from repro.serving.faults import FaultPlan
 from repro.serving.request import Request, RequestStatus
 from repro.serving.scheduler import Scheduler
 
@@ -81,10 +112,17 @@ class Engine:
         block_size: int = 16,
         n_blocks: Optional[int] = None,
         admit_window: int = 4,
+        age_limit: int = 16,
         spec_k: int = 0,
         draft=None,
         draft_depth: Optional[int] = None,
         draft_skip_layers: int = 0,
+        clock: Optional[Callable[[], float]] = None,
+        fault: Optional[FaultPlan] = None,
+        deadline_margin_s: float = 0.05,
+        queue_bound: Optional[int] = None,
+        degrade_down_after: int = 3,
+        degrade_up_after: int = 12,
     ):
         if model.prefill is None or model.decode_step is None:
             raise ValueError(f"family {cfg.family!r} cannot serve")
@@ -102,6 +140,11 @@ class Engine:
         self.max_len = max_len
         self.max_prompt_len = max_prompt_len or max_len // 2
         self.paged = paged
+        self._clock = clock if clock is not None else time.time
+        self._fault = fault
+        self.deadline_margin_s = deadline_margin_s
+        self.queue_bound = queue_bound if queue_bound is not None \
+            else 4 * n_slots
         self._rng = jax.random.PRNGKey(0) if rng is None else rng
         # disjoint RNG streams: decode-tick keys chain through fold_in(_, 0)
         # and admission keys through fold_in(_, 1), so a tick counter can
@@ -127,11 +170,13 @@ class Engine:
                     f"max_prompt_len={self.max_prompt_len} request "
                     f"(needs {min_pool})")
             self.allocator = BlockAllocator(n_blocks, block_size, n_slots,
-                                            self.max_blocks)
+                                            self.max_blocks, fault=fault)
+            # capacity check on ctx_len, not prompt_len: a requeued
+            # request re-prefills its prompt PLUS generated-so-far tokens
             self.scheduler = Scheduler(
                 n_slots,
-                admit_ok=lambda r: self.allocator.can_admit(r.prompt_len),
-                window=admit_window)
+                admit_ok=lambda r: self.allocator.can_admit(r.ctx_len),
+                window=admit_window, age_limit=age_limit)
             self._park = self._virtual
             self._cache = model.init_cache_paged(cfg, n_slots, n_blocks,
                                                  block_size)
@@ -146,7 +191,7 @@ class Engine:
             self._insert = None
         else:
             self.allocator = None
-            self.scheduler = Scheduler(n_slots)
+            self.scheduler = Scheduler(n_slots, age_limit=age_limit)
             self._park = max_len
             self._cache = model.init_cache(cfg, n_slots, max_len)
             # template for per-admission prefill: batch-1, same max_len slabs
@@ -169,12 +214,21 @@ class Engine:
             top_k=top_k, top_p=top_p))
         self.stats = {"prefill_dispatches": 0, "decode_ticks": 0,
                       "tokens_out": 0, "finished": 0, "preempted": 0,
+                      "requeued": 0, "timeout": 0, "rejected": 0,
+                      "deadline_preempts": 0, "corrupt_ticks": 0,
                       "stalled_slot_ticks": 0,
+                      "degrade_level": 0, "degrade_down": 0, "degrade_up": 0,
                       "prefill_s": 0.0, "decode_s": 0.0,
                       "drafted": 0, "accepted": 0, "acceptance_rate": 0.0,
                       "attn_gather_bytes": 0, "attn_kernel_bytes": 0}
+        self.wall_clock_exceeded = False
+        # preempted requests wait out an exponential backoff (in ticks)
+        # before re-entering the queue: (eligible_tick, request)
+        self._backoff: List[Tuple[int, Request]] = []
+        self._tick_no = 0
 
         self.spec_k = spec_k
+        self.spec_k_eff = spec_k
         self.draft = None
         if spec_k:
             vfn = model.verify_step_paged if paged else model.verify_step
@@ -197,6 +251,23 @@ class Engine:
                 model, cfg, sample=sample, temperature=temperature,
                 top_k=top_k, top_p=top_p, paged=paged, park=self._park),
                 donate_argnums=(1,))
+
+        # graceful-degradation ladder: reversible step-downs ordered
+        # cheapest-first (shrinking speculation costs acceptance rate,
+        # never tokens), with request shedding strictly last
+        self._levels = ["full"]
+        if spec_k >= 2:
+            self._levels.append("spec_half")
+        if spec_k >= 1:
+            self._levels.append("spec_off")
+        self._levels.append("shed")
+        self._level = 0
+        self._hot = 0
+        self._calm = 0
+        self.degrade_down_after = degrade_down_after
+        self.degrade_up_after = degrade_up_after
+        self._watchdog = StragglerMonitor(alpha=0.2, factor=3.0, warmup=3,
+                                          adapt_after=5)
 
     # -- accounting --------------------------------------------------------
 
@@ -260,19 +331,49 @@ class Engine:
             raise ValueError(
                 f"request {request.rid}: prompt {request.prompt_len} > "
                 f"max_prompt_len {self.max_prompt_len}")
+        if request.deadline_s is not None and request.deadline_s <= 0:
+            raise ValueError(
+                f"request {request.rid}: deadline_s must be positive")
         if self.cfg.family == "encdec" and request.frontend_embeds is None:
             # without frames the cross-KV stays all-zero: the request would
             # "succeed" while conditioning on a null encoder
             raise ValueError(
                 f"request {request.rid}: encdec family needs "
                 f"frontend_embeds")
-        request.t_submit = time.time()
+        now = self._clock()
+        request.t_submit = now
+        # degradation ladder, last rung: the admission queue is bounded
+        # and the lowest-priority request (newest on ties) is shed
+        if (self._levels[self._level] == "shed"
+                and len(self.scheduler.queue) >= self.queue_bound):
+            victim = min(
+                [request] + list(self.scheduler.queue),
+                key=lambda r: (r.priority,
+                               -(r.seq if r.seq is not None else 1 << 62)))
+            if victim is not request:
+                self.scheduler.queue.remove(victim)
+            victim.status = RequestStatus.FINISHED
+            victim.finish_reason = "rejected"
+            victim.t_finish = now
+            self.stats["rejected"] += 1
+            self.stats["finished"] += 1
+            if victim is request:
+                return
         self.scheduler.submit(request)
 
     # -- tick loop --------------------------------------------------------
 
-    def _admit_and_map(self) -> None:
-        """Admission pass + (paged) mapping of this tick's write window."""
+    def _release_backoff(self) -> None:
+        """Re-enter preempted requests whose backoff has elapsed."""
+        if not self._backoff:
+            return
+        ready = [r for t, r in self._backoff if t <= self._tick_no]
+        self._backoff = [(t, r) for t, r in self._backoff
+                         if t > self._tick_no]
+        for req in ready:
+            self.scheduler.submit(req)
+
+    def _admit_pass(self) -> None:
         if self.paged:
             # one at a time: each admission's block allocation must be
             # visible to the next can_admit capacity check
@@ -281,15 +382,38 @@ class Engine:
                 if not admitted:
                     break
                 self._admit(*admitted[0])
-            self._ensure_blocks(need=self.spec_k + 1)
         else:
             for slot, req in self.scheduler.admit():
                 self._admit(slot, req)
 
+    def _admit_and_map(self) -> None:
+        """Backoff release + admission + deadline preemption + (paged)
+        mapping of this tick's write window."""
+        self._release_backoff()
+        self._admit_pass()
+        if self._deadline_preempt(self._clock()):
+            self._admit_pass()
+        if self.paged:
+            self._ensure_blocks(need=(self.spec_k_eff or 0) + 1)
+
     def tick(self) -> int:
-        """Admit + one fused decode step; returns #active slots advanced."""
-        if self.spec_k:
-            return self._tick_spec()
+        """Deadline sweep + admit + one fused decode step; returns
+        #active slots advanced."""
+        tick_no = self._tick_no
+        self._tick_no += 1
+        self._expire_deadlines(self._clock())
+        t0 = time.perf_counter()
+        if self.spec_k_eff:
+            n = self._tick_spec(tick_no)
+        else:
+            n = self._tick_decode(tick_no)
+        dt = time.perf_counter() - t0
+        if self._fault is not None:
+            dt += self._fault.extra_tick_s(tick_no)
+        self._observe_pressure(dt, tick_no)
+        return n
+
+    def _tick_decode(self, tick_no: int) -> int:
         self._admit_and_map()
         active = self.scheduler.active()
         if active:
@@ -311,11 +435,21 @@ class Engine:
             self.stats["decode_s"] += time.perf_counter() - t0
             self.stats["decode_ticks"] += 1
             self.stats["stalled_slot_ticks"] += len(self._stalled)
-            now = time.time()
+            if self._fault is not None and self._fault.logits_corrupt(
+                    tick_no):
+                # simulated NaN/inf logits: every sampled id is garbage
+                tok_np = np.full_like(tok_np, -1)
+                self.stats["corrupt_ticks"] += 1
+            now = self._clock()
             for slot, req in active:
                 if slot in self._stalled:
                     continue  # parked this tick: its sampled token is junk
                 t = int(tok_np[slot])
+                if not 0 <= t < self.cfg.vocab_size:
+                    # corrupt decode output: heal by recompute — requeue
+                    # and re-prefill rather than commit a garbage token
+                    self._heal_or_kill(slot, req, now)
+                    continue
                 req.generated.append(t)
                 self.stats["tokens_out"] += 1
                 self._positions[slot] += 1
@@ -323,10 +457,10 @@ class Engine:
                 self._maybe_finish(slot, req, t, now)
         return len(active)
 
-    def _tick_spec(self) -> int:
+    def _tick_spec(self, tick_no: int) -> int:
         """One speculative tick: draft k, verify once, advance each slot
         by its accepted length, roll back the rest."""
-        k = self.spec_k
+        k = self.spec_k_eff
         self._admit_and_map()
         active = self.scheduler.active()
         if not active:
@@ -360,11 +494,20 @@ class Engine:
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_ticks"] += 1
         self.stats["stalled_slot_ticks"] += len(self._stalled)
+        corrupt = (self._fault is not None
+                   and self._fault.logits_corrupt(tick_no))
+        if corrupt:
+            self.stats["corrupt_ticks"] += 1
 
-        now = time.time()
+        now = self._clock()
         n_adv = np.zeros((self.n_slots,), np.int32)
         for slot, req in active:
             if slot in self._stalled:
+                continue
+            if corrupt:
+                # simulated NaN/inf verify logits: commit nothing for the
+                # slot, heal by recompute (requeue -> re-prefill)
+                self._heal_or_kill(slot, req, now)
                 continue
             n = int(acc_np[slot])
             self.stats["drafted"] += k
@@ -375,6 +518,9 @@ class Engine:
             # non-speculative engine would
             for i in range(n + 1):
                 t = int(out_np[slot, i])
+                if not 0 <= t < self.cfg.vocab_size:
+                    self._heal_or_kill(slot, req, now)
+                    break
                 req.generated.append(t)
                 self.stats["tokens_out"] += 1
                 self._positions[slot] += 1
@@ -389,40 +535,212 @@ class Engine:
         self.draft.commit(n_adv)
         if self.paged:
             # rollback: return verify-window pages beyond each surviving
-            # slot's committed frontier (finished slots already freed all).
+            # slot's committed frontier (finished slots already freed all,
+            # preempted/healed slots were fully released by the requeue).
             # +1 keeps the page the NEXT tick writes first: releasing it on
             # a page-boundary frontier would let the admission pass snatch
             # it back and spuriously stall (or even preempt) this slot.
             for slot, req in active:
-                if not req.done and slot not in self._stalled:
+                if (req.status is RequestStatus.ACTIVE
+                        and slot not in self._stalled):
                     self.allocator.trim_slot(
                         slot, int(self._positions[slot]) + 1)
         return len(active)
 
+    @property
+    def has_work(self) -> bool:
+        """Queued, active, or backoff-parked work remains."""
+        return self.scheduler.has_work or bool(self._backoff)
+
     def run(self, requests: Sequence[Request],
-            max_ticks: Optional[int] = None) -> List[Request]:
-        """Submit everything, tick until drained, return the requests."""
+            max_ticks: Optional[int] = None,
+            wall_clock_limit_s: Optional[float] = None) -> List[Request]:
+        """Submit everything, tick until drained, return the requests.
+
+        ``wall_clock_limit_s`` bounds the real time spent in the loop: a
+        hung or livelocked tick loop (e.g. a fault plan that never lets a
+        page map) exits with partial results — ``wall_clock_exceeded`` set
+        and unfinished requests left in their current state — instead of
+        spinning forever.  ``max_ticks`` still bounds the tick count
+        exactly and raises, as a logic-error (not overload) guard.
+        """
         for r in requests:
             self.submit(r)
         ticks = 0
-        while self.scheduler.has_work:
+        t0 = time.perf_counter()
+        while self.has_work:
+            if (wall_clock_limit_s is not None
+                    and time.perf_counter() - t0 > wall_clock_limit_s):
+                self.wall_clock_exceeded = True
+                break
             if max_ticks is not None and ticks >= max_ticks:
                 raise RuntimeError(f"engine not drained after {ticks} ticks")
             self.tick()
             ticks += 1
         return list(requests)
 
+    # -- deadlines / preemption -------------------------------------------
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Sweep queued and active requests past their deadline to
+        ``finish_reason="timeout"``."""
+        for req in self.scheduler.expire(now):
+            req.status = RequestStatus.FINISHED
+            req.finish_reason = "timeout"
+            req.t_finish = now
+            self.stats["timeout"] += 1
+            self.stats["finished"] += 1
+        for slot, req in self.scheduler.active():
+            if now >= req.deadline_abs():
+                self.stats["timeout"] += 1
+                self._finish(slot, req, "timeout", now)
+
+    def _can_requeue(self, req: Request) -> bool:
+        """May this active request be preempted-with-requeue?  Needs
+        budget left and a context short enough to re-prefill (the prompt
+        plus generated-so-far must fit the prefill window)."""
+        return (req.n_preemptions < req.max_preemptions
+                and req.ctx_len <= self.max_prompt_len)
+
+    def _evict_reason(self, req: Request) -> str:
+        return ("preempted_limit"
+                if req.n_preemptions >= req.max_preemptions
+                else "cache_full")
+
+    def _preempt(self, slot: int, req: Request) -> None:
+        """Preempt-and-requeue with recompute: release the slot (and its
+        pages), park the row, and send the request back to the queue with
+        exponential tick backoff.  Its generated-so-far tokens stay on the
+        request and fold into the re-prefill context at readmission, so a
+        greedy stream continues bit-identically."""
+        req.n_preemptions += 1
+        self.scheduler.release(slot)
+        if self.paged:
+            self.allocator.free_slot(slot)
+        self._positions[slot] = self._park      # park: no cache writes
+        self._stalled.discard(slot)
+        req.status = RequestStatus.QUEUED
+        self.stats["preempted"] += 1
+        self.stats["requeued"] += 1
+        backoff = 1 << min(req.n_preemptions - 1, 6)
+        self._backoff.append((self._tick_no + backoff, req))
+
+    def preempt(self, slot: int) -> None:
+        """Public preempt-and-requeue of the request in ``slot`` — the
+        building block a multi-replica front door's drain-and-redistribute
+        uses, and the deterministic hook the resilience tests drive."""
+        req = self.scheduler.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is free")
+        if not self._can_requeue(req):
+            raise ValueError(
+                f"request {req.rid} cannot requeue (preemptions "
+                f"{req.n_preemptions}/{req.max_preemptions}, ctx "
+                f"{req.ctx_len} vs max_prompt_len {self.max_prompt_len})")
+        self._preempt(slot, req)
+
+    def _heal_or_kill(self, slot: int, req: Request, now: float) -> None:
+        """Corrupt decode output for this slot: requeue-with-recompute if
+        the budget allows, terminal eviction otherwise."""
+        if self._can_requeue(req):
+            self._preempt(slot, req)
+        else:
+            self.stats["preempted"] += 1
+            self._finish(slot, req, self._evict_reason(req), now)
+
+    def _deadline_preempt(self, now: float) -> bool:
+        """A queued request about to miss its deadline may evict-with-
+        requeue the active request with the most slack.  At most one
+        preemption per tick; the victim must itself be requeueable and
+        strictly less urgent than the starving request."""
+        starving = self.scheduler.most_urgent()
+        if starving is None or starving.deadline_s is None:
+            return False
+        slack = starving.slack(now)
+        if slack > self.deadline_margin_s:
+            return False
+        cands = [(s, r) for s, r in self.scheduler.active()
+                 if self._can_requeue(r) and r.slack(now) > slack]
+        if not cands:
+            return False
+        slot, req = max(
+            cands,
+            key=lambda sr: (sr[1].slack(now), -sr[1].priority,
+                            self.allocator.blocks_held(sr[0])
+                            if self.paged else 0))
+        self.stats["deadline_preempts"] += 1
+        self._preempt(slot, req)
+        return True
+
+    # -- degradation ladder ------------------------------------------------
+
+    @property
+    def degrade_level(self) -> str:
+        """Current ladder rung name (``full`` when healthy)."""
+        return self._levels[self._level]
+
+    def _observe_pressure(self, dt: float, tick_no: int) -> None:
+        """Feed the tick-latency watchdog and pool/queue pressure signals;
+        step the ladder down after ``degrade_down_after`` consecutive hot
+        ticks, back up after ``degrade_up_after`` consecutive calm ones."""
+        straggler = self._watchdog.observe(tick_no, dt)
+        pool_dry = (self.paged and bool(self._stalled)
+                    and self.allocator.n_free == 0)
+        queue_over = len(self.scheduler.queue) > self.queue_bound
+        if straggler or pool_dry or queue_over:
+            self._hot += 1
+            self._calm = 0
+            if (self._hot >= self.degrade_down_after
+                    and self._level < len(self._levels) - 1):
+                self._set_level(self._level + 1)
+                self._hot = 0
+        else:
+            self._calm += 1
+            self._hot = 0
+            if self._calm >= self.degrade_up_after and self._level > 0:
+                self._set_level(self._level - 1)
+                self._calm = 0
+
+    def _set_level(self, level: int) -> None:
+        """Apply one reversible ladder transition.  Ordering guarantee:
+        levels only ever change speculation depth (token streams are
+        invariant — greedy speculation is exact at any k, including 0)
+        or gate NEW admissions (shedding); tokens already streaming are
+        never altered by a transition."""
+        if level > self._level:
+            self.stats["degrade_down"] += 1
+        else:
+            self.stats["degrade_up"] += 1
+        self._level = level
+        self.stats["degrade_level"] = level
+        name = self._levels[level]
+        k_eff = {"full": self.spec_k,
+                 "spec_half": max(1, self.spec_k // 2),
+                 "spec_off": 0,
+                 "shed": 0}[name]
+        if self.spec_k and k_eff != self.spec_k_eff:
+            self.spec_k_eff = k_eff
+            if k_eff and self.draft is not None:
+                self.draft.set_k(k_eff)
+        # the per-tick cost legitimately changed with the level: re-seed
+        # the watchdog baseline instead of flagging every healthy tick
+        self._watchdog.reset()
+
     # -- internals --------------------------------------------------------
 
     def _admit(self, slot: int, req: Request) -> None:
+        # re-prefill context: the prompt plus (after a preemption) every
+        # token generated so far — recompute makes the requeue transparent
+        ctx = list(req.prompt) + [int(t) for t in req.generated]
+        clen = len(ctx)
         p = self.max_prompt_len
         toks = np.zeros((1, p), np.int32)
-        toks[0, : req.prompt_len] = np.asarray(req.prompt, np.int32)
-        lengths = jnp.asarray([req.prompt_len], jnp.int32)
+        toks[0, :clen] = np.asarray(ctx, np.int32)
+        lengths = jnp.asarray([clen], jnp.int32)
         fe = getattr(req, "frontend_embeds", None)
         t0 = time.perf_counter()
         if self.paged:
-            self.allocator.alloc_slot(slot, req.prompt_len)
+            self.allocator.alloc_slot(slot, clen)
             last_logits, self._cache = self._prefill(
                 self.params, self._cache, self._slot_template,
                 jnp.asarray(toks), lengths,
@@ -441,30 +759,44 @@ class Engine:
             self.draft.prefill(slot, jnp.asarray(toks), lengths, fe)
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_dispatches"] += 1
-        req.t_first_token = time.time()
+        now = self._clock()
+        if req.t_first_token is None:       # readmissions keep the mark
+            req.t_first_token = now
         req.generated.append(tok)
         self.stats["tokens_out"] += 1
         self._tokens[slot] = tok
-        self._positions[slot] = req.prompt_len
-        self._maybe_finish(slot, req, tok, req.t_first_token)
+        self._positions[slot] = clen
+        self._maybe_finish(slot, req, tok, now)
 
     def _ensure_blocks(self, need: int = 1) -> None:
         """Map each active slot's write window (``need`` positions from its
         frontier — 1 per decode tick, k+1 per speculative tick); stall
         slots the pool cannot serve, and break an all-stalled deadlock by
-        evicting the stalled request holding the most pages."""
+        preempting-with-requeue the lowest-priority stalled request
+        holding the most pages (terminal eviction only when its requeue
+        budget or re-prefill window is exhausted)."""
         self._stalled = set()
         active = self.scheduler.active()
         for slot, _ in active:
-            if not self.allocator.ensure_range(
+            forced = (self._fault is not None
+                      and self._fault.spurious_stall(slot))
+            if forced or not self.allocator.ensure_range(
                     slot, int(self._positions[slot]), need):
                 self._stalled.add(slot)
         if self._stalled and len(self._stalled) == len(active):
-            slot, req = max(active,
-                            key=lambda sr: self.allocator.blocks_held(sr[0]))
-            self._finish(slot, req, "cache_full", time.time())
-            self.stats["preempted"] += 1
-            self._stalled.discard(slot)
+            stalled = [(s, r) for s, r in active if s in self._stalled]
+            requeueable = [(s, r) for s, r in stalled
+                           if self._can_requeue(r)]
+            pool = requeueable or stalled
+            slot, req = max(pool, key=lambda sr: (
+                -sr[1].priority, self.allocator.blocks_held(sr[0])))
+            if requeueable:
+                self._preempt(slot, req)
+            else:
+                self.stats["preempted"] += 1
+                self._finish(slot, req, self._evict_reason(req),
+                             self._clock())
+                self._stalled.discard(slot)
             for slot2 in sorted(self._stalled):
                 if self.allocator.ensure_range(
                         slot2, int(self._positions[slot2]), need):

@@ -55,6 +55,8 @@ class DraftSource(Protocol):
 
     def commit(self, n_adv) -> None: ...
 
+    def set_k(self, k: int) -> None: ...
+
 
 def truncate_cascades(params: dict, depth: int) -> dict:
     """Slice every stacked cascade leaf under a ``sell`` subtree to its
@@ -95,6 +97,7 @@ class _EngineDraft:
     def prepare(self, n_slots: int, max_len: int, k: int, sample: str,
                 temperature: float, top_k: int, top_p: float) -> None:
         self.k = k
+        self._sampler_cfg = (sample, temperature, top_k, top_p)
         self._cache = self.model.init_cache(self.cfg, n_slots, max_len)
         self._template = self.model.init_cache(self.cfg, 1, max_len)
         self._prefill = jax.jit(
@@ -104,6 +107,21 @@ class _EngineDraft:
             k, sample, temperature, top_k, top_p), donate_argnums=(1,))
         self._commit = (jax.jit(self._make_commit(), donate_argnums=(0,))
                         if self.rec_keys else None)
+
+    def set_k(self, k: int) -> None:
+        """Re-point the fused propose program at a new draft length — the
+        engine's degradation ladder steps ``spec_k`` down under load (and
+        back up on recovery).  The slot cache and every other compiled
+        program are kept; only the propose scan is rebuilt (jit caches
+        each distinct k after its first trace)."""
+        if k == self.k:
+            return
+        if k < 1:
+            raise ValueError("set_k needs k >= 1; the engine disables "
+                             "speculation itself at spec_k_eff=0")
+        self.k = k
+        self._propose = jax.jit(self._make_propose(
+            k, *self._sampler_cfg), donate_argnums=(1,))
 
     def _make_propose(self, k: int, sample: str, temperature: float,
                       top_k: int, top_p: float):

@@ -1,0 +1,200 @@
+"""Fault injection: FaultPlan determinism, allocator audit invariants, and
+the seeded chaos replay — the CI gate that proves the overload machinery
+*recovers*: every request reaches a terminal state, requests that finish
+normally stream bit-identically to a fault-free run (recompute heals
+preemptions and corrupt ticks), evicted requests keep clean stream
+prefixes, and the page pool comes back leak-free."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import get_model
+from repro.serving import (
+    BlockAllocator,
+    Engine,
+    FaultPlan,
+    FinishReason,
+    Request,
+)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan (host-side, no jax).
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_replays_exactly():
+    """Two plans built with the same parameters see the same faults at the
+    same decision points, even when the surfaces interleave differently —
+    each surface draws from its own stream."""
+    a = FaultPlan(seed=9, p_alloc_fail=0.3, p_spurious_stall=0.2,
+                  p_nan=0.1, p_slow=0.2, slow_extra_s=1.5)
+    b = FaultPlan(seed=9, p_alloc_fail=0.3, p_spurious_stall=0.2,
+                  p_nan=0.1, p_slow=0.2, slow_extra_s=1.5)
+    seq_a = [a.alloc_fail() for _ in range(50)]
+    # b interleaves other surfaces between its alloc draws: the alloc
+    # sequence must be unaffected
+    seq_b = []
+    for i in range(50):
+        b.spurious_stall(i % 4)
+        seq_b.append(b.alloc_fail())
+        b.logits_corrupt(i)
+        b.extra_tick_s(i)
+    assert seq_a == seq_b
+    assert a.injected["alloc_fail"] == b.injected["alloc_fail"]
+
+
+def test_fault_plan_default_is_noop():
+    p = FaultPlan()
+    assert not p.alloc_fail()
+    assert not p.spurious_stall(0)
+    assert not p.logits_corrupt(0)
+    assert p.extra_tick_s(0) == 0.0
+    assert all(v == 0 for v in p.injected.values())
+
+
+def test_fault_plan_explicit_ticks_fire_unconditionally():
+    p = FaultPlan(nan_ticks=(3,), slow_ticks=(5,), slow_extra_s=2.0)
+    assert not p.logits_corrupt(2)
+    assert p.logits_corrupt(3)
+    assert p.extra_tick_s(5) == 2.0
+    assert p.extra_tick_s(6) == 0.0
+    assert p.injected == {"alloc_fail": 0, "spurious_stall": 0,
+                          "nan": 1, "slow": 1}
+
+
+# ---------------------------------------------------------------------------
+# Allocator audit: every release path must leave the pool consistent.
+# ---------------------------------------------------------------------------
+
+def test_audit_clean_across_all_release_paths():
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=2,
+                       max_blocks_per_slot=4)
+    assert a.audit() == {"free": 6, "held": 0, "mapped": 0}
+    a.alloc_slot(0, 7)                          # admission
+    a.audit()
+    assert a.ensure_range(0, 8, 3)              # decode/verify growth
+    a.audit()
+    a.trim_slot(0, 9)                           # speculative rollback
+    a.audit()
+    a.alloc_slot(1, 3)
+    # dry-pool rollback: ensure_range must return ITS OWN pages on failure
+    assert a.ensure_range(1, 4, 12) is False
+    a.audit()
+    a.free_slot(0)                              # eviction / preemption
+    a.audit()
+    a.free_slot(1)
+    assert a.audit() == {"free": 6, "held": 0, "mapped": 0}
+
+
+def test_audit_catches_corruption():
+    a = BlockAllocator(n_blocks=4, block_size=4, n_slots=2,
+                       max_blocks_per_slot=2)
+    a.alloc_slot(0, 3)
+    blk = int(a.table[0, 0])
+    a.table[1, 0] = blk                         # double-map
+    with pytest.raises(AssertionError, match="double-mapped"):
+        a.audit()
+    a.table[1, 0] = -1
+    a.table[0, 1] = a.trash                     # trash page mapped
+    with pytest.raises(AssertionError, match="non-pool"):
+        a.audit()
+    a.table[0, 1] = -1
+    a._free.append(blk)                         # page both free and held
+    with pytest.raises(AssertionError, match="free and held"):
+        a.audit()
+
+
+def test_allocator_fault_denies_without_breaking_invariants():
+    plan = FaultPlan(p_alloc_fail=1.0)
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=2,
+                       max_blocks_per_slot=4, fault=plan)
+    assert not a.can_admit(3)                   # pages free, fault denies
+    assert not a.ensure_range(0, 0, 1)
+    assert a.n_free == 6
+    a.audit()
+    assert plan.injected["alloc_fail"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos replay (the acceptance criterion).
+# ---------------------------------------------------------------------------
+
+ARCHS = ["qwen3_1_7b", "zamba2_1_2b"]
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for name in ARCHS:
+        cfg = registry.get_smoke_config(name)
+        model = get_model(cfg)
+        out[name] = (cfg, model, model.init(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+def _mk_requests(cfg, n=9, seed=11):
+    rs = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab_size,
+                                      size=int(rs.randint(4, 17))).tolist(),
+                    max_new_tokens=int(rs.randint(8, 13)))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_chaos_run_recovers_clean(zoo, name):
+    """Replay a seeded fault schedule — denied pages, spurious stalls,
+    two corrupt-logit ticks, simulated stragglers — against a tight pool
+    and assert the recovery invariants."""
+    cfg, model, params = zoo[name]
+
+    def build(fault=None):
+        return Engine(model, cfg, params, n_slots=3, max_len=48,
+                      max_prompt_len=24, paged=True, block_size=8,
+                      n_blocks=10, fault=fault)
+
+    base = _mk_requests(cfg)
+    build().run(base, max_ticks=2000)
+    assert all(r.finish_reason == "length" for r in base)
+
+    reqs = _mk_requests(cfg)
+    fault = FaultPlan(seed=3, p_alloc_fail=0.08, p_spurious_stall=0.04,
+                      nan_ticks=(5, 11), p_slow=0.05, slow_extra_s=123.0)
+    eng = build(fault)
+    eng.run(reqs, max_ticks=4000)
+
+    # every request reaches a terminal state with a known reason
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason in FinishReason.ALL for r in reqs)
+    # the chaos actually bit: corrupt ticks healed via requeue
+    assert eng.stats["corrupt_ticks"] >= 1
+    assert eng.stats["requeued"] >= 1
+    # recompute guarantee: normal finishes stream bit-identically,
+    # terminal evictions keep a clean prefix
+    for b, r in zip(base, reqs):
+        if r.finish_reason in ("eos", "length"):
+            assert r.generated == b.generated, (
+                f"rid={r.rid}: chaos {r.generated} != base {b.generated}")
+        else:
+            assert b.generated[:len(r.generated)] == r.generated
+    # leak-free pool
+    eng.allocator.audit()
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+
+
+def test_wall_clock_limit_exits_livelock(zoo):
+    """A plan that denies every page forever livelocks the tick loop
+    (nothing admits, the queue never drains); ``wall_clock_limit_s`` must
+    exit with partial results instead of spinning until max_ticks."""
+    cfg, model, params = zoo["qwen3_1_7b"]
+    eng = Engine(model, cfg, params, n_slots=2, max_len=48,
+                 max_prompt_len=16, paged=True, block_size=8,
+                 fault=FaultPlan(p_alloc_fail=1.0))
+    reqs = _mk_requests(cfg, n=3)
+    out = eng.run(reqs, wall_clock_limit_s=1.5)
+    assert eng.wall_clock_exceeded
+    assert all(not r.done for r in out)         # partial state, not killed
+    assert eng.stats["tokens_out"] == 0
+    eng.allocator.audit()

@@ -1,0 +1,407 @@
+"""Overload resilience: preempt-and-requeue with recompute, deadline-aware
+scheduling, head-of-line aging, and the graceful-degradation ladder.
+
+The acceptance criterion throughout is the recompute guarantee: a greedy
+request stream disturbed by preemption / deadline eviction / ladder
+transitions is bit-identical to (or a prefix of) the undisturbed run —
+resilience trades latency, never tokens."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import get_model
+from repro.serving import Engine, FaultPlan, Request, RequestStatus
+from repro.serving.scheduler import Scheduler
+from repro.spec import ModelDraft
+
+
+class FakeClock:
+    """Deterministic wall clock the deadline tests advance by hand."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (host-side, no jax): EDF order, expiry, aging.
+# ---------------------------------------------------------------------------
+
+def test_scheduler_edf_then_priority_then_arrival():
+    s = Scheduler(n_slots=3)
+    a = Request(rid=0, prompt=[1])                      # no deadline
+    b = Request(rid=1, prompt=[1], deadline_s=5.0)
+    c = Request(rid=2, prompt=[1], deadline_s=1.0)
+    for r in (a, b, c):
+        r.t_submit = 0.0
+        s.submit(r)
+    order = [r.rid for _, r in s.admit()]
+    assert order == [2, 1, 0]       # earliest deadline first, none last
+
+
+def test_scheduler_priority_breaks_ties_then_fifo():
+    s = Scheduler(n_slots=3)
+    lo = Request(rid=0, prompt=[1], priority=0)
+    hi = Request(rid=1, prompt=[1], priority=3)
+    lo2 = Request(rid=2, prompt=[1], priority=0)
+    for r in (lo, hi, lo2):
+        s.submit(r)
+    assert [r.rid for _, r in s.admit()] == [1, 0, 2]
+
+
+def test_scheduler_expire_sweeps_only_past_deadline():
+    s = Scheduler(n_slots=1)
+    a = Request(rid=0, prompt=[1], deadline_s=1.0)
+    b = Request(rid=1, prompt=[1], deadline_s=9.0)
+    c = Request(rid=2, prompt=[1])
+    for r in (a, b, c):
+        r.t_submit = 0.0
+        s.submit(r)
+    gone = s.expire(2.0)
+    assert [r.rid for r in gone] == [0]
+    assert [r.rid for r in s.queue] == [1, 2]
+
+
+def test_scheduler_aging_reserves_capacity_for_blocked_head():
+    """A capacity-blocked head is skipped only ``age_limit`` times; past
+    that the scheduler admits nobody else, so freed capacity accrues to
+    the head instead of every later small request jumping it forever
+    (the seed's unbounded-starvation bug)."""
+    cap = [1]
+    s = Scheduler(n_slots=1, admit_ok=lambda r: r.prompt_len <= cap[0],
+                  window=4, age_limit=2)
+    big = Request(rid=0, prompt=[0] * 5)
+    s.submit(big)
+    for i in range(1, 5):
+        s.submit(Request(rid=100 + i, prompt=[0]))
+    admitted = []
+    for _ in range(2):              # skips 1, 2: smalls still pass the head
+        adm = s.admit()
+        assert len(adm) == 1
+        admitted.append(adm[0][1].rid)
+        s.release(adm[0][0])
+    assert admitted == [101, 102]
+    for _ in range(3):              # aged out: capacity reserved, nobody in
+        assert s.admit() == []
+    assert big.sched_skips > 2
+    cap[0] = 5                      # capacity finally fits the head
+    adm = s.admit()
+    assert [r.rid for _, r in adm] == [0]
+    assert big.sched_skips == 0     # admission resets the age
+
+
+# ---------------------------------------------------------------------------
+# Engine fixtures.
+# ---------------------------------------------------------------------------
+
+ARCHS = ["qwen3_1_7b", "zamba2_1_2b"]   # two pageable families
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for name in ARCHS:
+        cfg = registry.get_smoke_config(name)
+        model = get_model(cfg)
+        out[name] = (cfg, model, model.init(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+def _mk_requests(cfg, n=4, seed=5, max_new=10, **kw):
+    rs = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab_size,
+                                      size=int(rs.randint(4, 12))).tolist(),
+                    max_new_tokens=max_new, **kw)
+            for i in range(n)]
+
+
+def _drain(eng, limit=600):
+    ticks = 0
+    while eng.has_work:
+        eng.tick()
+        ticks += 1
+        assert ticks < limit, "engine failed to drain"
+    return ticks
+
+
+# ---------------------------------------------------------------------------
+# Preempt-and-requeue with recompute (the tentpole acceptance criterion).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_preempt_requeue_streams_bit_identical(zoo, name):
+    """Every active slot is preempted mid-stream; after requeue +
+    re-prefill the greedy streams and finish reasons match the
+    undisturbed run exactly, and the pool comes back leak-free."""
+    cfg, model, params = zoo[name]
+
+    def build():
+        return Engine(model, cfg, params, n_slots=2, max_len=64,
+                      max_prompt_len=32, paged=True, block_size=8)
+
+    base = _mk_requests(cfg)
+    build().run(base, max_ticks=600)
+    assert all(r.done for r in base)
+
+    reqs = _mk_requests(cfg)
+    eng = build()
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.tick()
+    victims = [slot for slot, r in eng.scheduler.active() if not r.done]
+    assert victims, "nothing active to preempt"
+    for slot in victims:
+        eng.preempt(slot)
+    _drain(eng)
+    assert eng.stats["requeued"] >= len(victims)
+    preempted = [r for r in reqs if r.n_preemptions > 0]
+    assert len(preempted) >= len(victims)
+    for b, r in zip(base, reqs):
+        assert r.generated == b.generated, (
+            f"rid={r.rid}: preempted {r.generated} != base {b.generated}")
+        assert r.finish_reason == b.finish_reason
+    eng.allocator.audit()
+
+
+def test_all_stalled_deadlock_requeues_not_kills(zoo):
+    """Pool sized so both slots admit then deadlock on growth: the seed
+    killed one with ``cache_full``; now the victim requeues, re-prefills
+    once pages free up, and BOTH streams finish bit-identical to a
+    roomy-pool run."""
+    cfg, model, params = zoo["qwen3_1_7b"]
+    rs = np.random.RandomState(7)
+    prompts = [rs.randint(0, cfg.vocab_size, size=15).tolist()
+               for _ in range(2)]
+
+    def mk(**kw):
+        return [Request(rid=i, prompt=p, max_new_tokens=10, **kw)
+                for i, p in enumerate(prompts)]
+
+    base = mk()
+    Engine(model, cfg, params, n_slots=2, max_len=64, max_prompt_len=24,
+           paged=True, block_size=8).run(base, max_ticks=600)
+
+    reqs = mk()
+    eng = Engine(model, cfg, params, n_slots=2, max_len=64,
+                 max_prompt_len=24, paged=True, block_size=8, n_blocks=4)
+    eng.run(reqs, max_ticks=600)
+    assert eng.stats["requeued"] >= 1
+    assert any(r.n_preemptions > 0 for r in reqs)
+    for b, r in zip(base, reqs):
+        assert r.generated == b.generated
+        assert r.finish_reason == "length"
+    eng.allocator.audit()
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+
+
+def test_deadlock_without_requeue_budget_is_terminal(zoo):
+    """Same deadlock with ``max_preemptions=0``: no victim may requeue, so
+    one request is terminally evicted with ``preempted_limit`` — and its
+    partial stream is still a clean prefix of the undisturbed run."""
+    cfg, model, params = zoo["qwen3_1_7b"]
+    rs = np.random.RandomState(7)
+    prompts = [rs.randint(0, cfg.vocab_size, size=15).tolist()
+               for _ in range(2)]
+
+    base = [Request(rid=i, prompt=p, max_new_tokens=10)
+            for i, p in enumerate(prompts)]
+    Engine(model, cfg, params, n_slots=2, max_len=64, max_prompt_len=24,
+           paged=True, block_size=8).run(base, max_ticks=600)
+
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=10, max_preemptions=0)
+            for i, p in enumerate(prompts)]
+    eng = Engine(model, cfg, params, n_slots=2, max_len=64,
+                 max_prompt_len=24, paged=True, block_size=8, n_blocks=4)
+    eng.run(reqs, max_ticks=600)
+    assert eng.stats["requeued"] == 0
+    evicted = [r for r in reqs if r.finish_reason == "preempted_limit"]
+    survived = [r for r in reqs if r.finish_reason == "length"]
+    assert len(evicted) == 1 and len(survived) == 1
+    for b, r in zip(base, reqs):
+        assert b.generated[:len(r.generated)] == r.generated
+    eng.allocator.audit()
+
+
+# ---------------------------------------------------------------------------
+# Deadlines (virtual clock).
+# ---------------------------------------------------------------------------
+
+def test_deadline_timeout_queued_and_active(zoo):
+    cfg, model, params = zoo["qwen3_1_7b"]
+    clock = FakeClock()
+    eng = Engine(model, cfg, params, n_slots=1, max_len=48,
+                 max_prompt_len=16, clock=clock)
+    rs = np.random.RandomState(2)
+    hog = Request(rid=0, prompt=rs.randint(0, cfg.vocab_size,
+                                           size=6).tolist(),
+                  max_new_tokens=12, deadline_s=100.0)
+    late = Request(rid=1, prompt=rs.randint(0, cfg.vocab_size,
+                                            size=6).tolist(),
+                   max_new_tokens=12, deadline_s=1.0)
+    eng.submit(hog)
+    eng.tick()
+    assert hog.status is RequestStatus.ACTIVE
+    eng.submit(late)                    # queued behind the hog
+    clock.t = 2.0                       # past late's deadline, queued
+    eng.tick()
+    assert late.done and late.finish_reason == "timeout"
+    assert late.generated == []         # no prefill burned on a dead SLO
+    clock.t = 101.0                     # past hog's deadline, mid-stream
+    eng.tick()
+    assert hog.done and hog.finish_reason == "timeout"
+    assert 0 < len(hog.generated) < 12  # partial stream kept
+    assert eng.stats["timeout"] == 2
+
+
+def test_engine_admits_earliest_deadline_first(zoo):
+    cfg, model, params = zoo["qwen3_1_7b"]
+    clock = FakeClock()
+    eng = Engine(model, cfg, params, n_slots=1, max_len=48,
+                 max_prompt_len=16, clock=clock)
+    rs = np.random.RandomState(3)
+    reqs = [Request(rid=i, prompt=rs.randint(0, cfg.vocab_size,
+                                             size=5).tolist(),
+                    max_new_tokens=4, deadline_s=d)
+            for i, d in enumerate([None, 50.0, 5.0])]
+    for r in reqs:
+        eng.submit(r)
+    eng.tick()
+    assert reqs[2].status is RequestStatus.ACTIVE   # tightest deadline wins
+    _drain(eng)
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+def test_deadline_preempts_slack_rich_active_request(zoo):
+    """A queued request about to miss its deadline evicts-with-requeue the
+    active request with the most slack; the victim's stream still matches
+    its undisturbed run after readmission."""
+    cfg, model, params = zoo["qwen3_1_7b"]
+    rs = np.random.RandomState(4)
+    hog_prompt = rs.randint(0, cfg.vocab_size, size=6).tolist()
+    urgent_prompt = rs.randint(0, cfg.vocab_size, size=6).tolist()
+
+    base = Request(rid=0, prompt=hog_prompt, max_new_tokens=10)
+    Engine(model, cfg, params, n_slots=1, max_len=48,
+           max_prompt_len=32).run([base], max_ticks=200)
+
+    clock = FakeClock()
+    eng = Engine(model, cfg, params, n_slots=1, max_len=48,
+                 max_prompt_len=32, clock=clock)
+    hog = Request(rid=0, prompt=hog_prompt, max_new_tokens=10)
+    eng.submit(hog)
+    eng.tick()
+    urgent = Request(rid=1, prompt=urgent_prompt, max_new_tokens=4,
+                     deadline_s=0.5)
+    eng.submit(urgent)                  # t_submit = 0.0
+    clock.t = 0.46                      # slack 0.04 < margin 0.05
+    eng.tick()
+    assert eng.stats["deadline_preempts"] == 1
+    assert urgent.status is RequestStatus.ACTIVE
+    assert hog.status is RequestStatus.QUEUED and hog.n_preemptions == 1
+    _drain(eng)
+    assert urgent.finish_reason == "length"
+    assert hog.finish_reason == "length"
+    assert hog.generated == base.generated
+
+
+# ---------------------------------------------------------------------------
+# Graceful-degradation ladder.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_ladder_degrades_under_stragglers_and_recovers(zoo):
+    """Simulated slow ticks push the watchdog past its threshold: the
+    ladder shrinks speculation, then steps back up after sustained calm —
+    and the greedy streams never change across any transition."""
+    cfg, model, params = zoo["qwen3_1_7b"]
+
+    def build(fault=None):
+        return Engine(model, cfg, params, n_slots=2, max_len=64,
+                      max_prompt_len=16, spec_k=4, fault=fault,
+                      draft=ModelDraft(cfg, params=params),
+                      degrade_down_after=2, degrade_up_after=3)
+
+    base = _mk_requests(cfg, n=4, max_new=12)
+    build().run(base, max_ticks=600)
+
+    reqs = _mk_requests(cfg, n=4, max_new=12)
+    fault = FaultPlan(slow_ticks=(4, 5, 6, 7), slow_extra_s=300.0)
+    eng = build(fault)
+    eng.run(reqs, max_ticks=600)
+    assert eng.stats["degrade_down"] >= 1
+    assert fault.injected["slow"] >= 2
+    for _ in range(50):                 # idle ticks are calm: step back up
+        if eng.degrade_level == "full":
+            break
+        eng.tick()
+    assert eng.degrade_level == "full"
+    assert eng.stats["degrade_up"] >= 1
+    assert eng.spec_k_eff == eng.spec_k == 4
+    for b, r in zip(base, reqs):
+        assert r.generated == b.generated
+        assert r.finish_reason == b.finish_reason
+
+
+def test_shed_level_bounds_queue_and_drops_lowest_priority(zoo):
+    cfg, model, params = zoo["qwen3_1_7b"]
+    eng = Engine(model, cfg, params, n_slots=1, max_len=48,
+                 max_prompt_len=16, queue_bound=2,
+                 degrade_down_after=1, degrade_up_after=1000)
+    rs = np.random.RandomState(6)
+
+    def mk(rid, priority=0):
+        return Request(rid=rid,
+                       prompt=rs.randint(0, cfg.vocab_size,
+                                         size=5).tolist(),
+                       max_new_tokens=4, priority=priority)
+
+    first = [mk(i) for i in range(5)]
+    for r in first:
+        eng.submit(r)                   # 1 admits, 4 queued > bound of 2
+    eng.tick()
+    assert eng.degrade_level == "shed"
+    # at the shed rung a full queue rejects the lowest-priority newcomer...
+    walkup = mk(100)
+    eng.submit(walkup)
+    assert walkup.done and walkup.finish_reason == "rejected"
+    # ...but a high-priority newcomer displaces a queued peer instead
+    vip = mk(101, priority=5)
+    eng.submit(vip)
+    assert vip.status is RequestStatus.QUEUED
+    shed = [r for r in first if r.finish_reason == "rejected"]
+    assert len(shed) == 1
+    assert eng.stats["rejected"] == 2
+    _drain(eng)
+    for r in first + [vip]:
+        if r.finish_reason != "rejected":
+            assert r.finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# TTFT bookkeeping across requeues.
+# ---------------------------------------------------------------------------
+
+def test_requeue_preserves_first_token_mark(zoo):
+    cfg, model, params = zoo["qwen3_1_7b"]
+    clock = FakeClock()
+    eng = Engine(model, cfg, params, n_slots=1, max_len=48,
+                 max_prompt_len=32, paged=True, block_size=8, clock=clock)
+    rs = np.random.RandomState(8)
+    req = Request(rid=0, prompt=rs.randint(0, cfg.vocab_size,
+                                           size=6).tolist(),
+                  max_new_tokens=8)
+    eng.submit(req)
+    clock.t = 1.0
+    eng.tick()
+    assert req.t_first_token == 1.0
+    eng.preempt(0)
+    clock.t = 5.0
+    _drain(eng)
+    assert req.t_first_token == 1.0     # readmission must not move TTFT
+    assert req.finish_reason == "length"
