@@ -32,6 +32,12 @@ The bench also snapshots ``ops.CASCADE_BWD_DISPATCHES`` and FAILS if a
 fused-regime cascade backward routed to the per-layer scan — the CI
 regression gate for the reverse-sweep dispatch.
 
+A ``cascade_families`` section runs the fused cascade (fwd + full VJP)
+once per registered transform family (acdc / circulant / hadamard, see
+``core/families.py``) and asserts the analytic bytes/row model is
+family-invariant — the families swap the C/C^T operand contents, never
+the kernel's memory behaviour.
+
 A ``paged_attn`` section benches the serving-side fused paged-attention
 kernel against the block-table gather on synthetic pool/table operands
 (decode T=1 and verify T=3 grids) at a FIXED live length across growing
@@ -137,6 +143,45 @@ def bench_cascade(n: int, k: int, m: int, iters: int, trials: int,
         "roofline_bytes_per_row": {
             "fused": rb["fwd_cascade_fused"],
             "per_layer": rb["fwd_per_layer_cascade"],
+        },
+    }
+
+
+def bench_cascade_family(family: str, n: int, k: int, m: int, iters: int,
+                         trials: int, non_roofline: bool) -> dict:
+    """Per-family whole-cascade fwd + full VJP wall-clock.
+
+    The analytic bytes/row model is family-INVARIANT: every registered
+    family feeds the same kernel bodies the same-shaped C/C^T operands,
+    so per-row HBM traffic is identical — only the matrix contents (and
+    thus any device-side sparsity/compiler luck) differ.  The bench
+    records that invariance explicitly.
+    """
+    from repro.core import families as families_mod
+
+    n = families_mod.get_family(family).valid_size(n)
+    x, a, d, g = _cascade_operands(n, k, m)
+
+    fwd = jax.jit(lambda x, a, d: ops.acdc_cascade_op(
+        x, a, d, relu=True, permute=True, family=family))
+
+    @jax.jit
+    def bwd(x, a, d, g):
+        _, vjp = jax.vjp(lambda x, a, d: ops.acdc_cascade_op(
+            x, a, d, relu=True, permute=True, family=family), x, a, d)
+        return vjp(g)
+
+    rb = per_row_bytes(n, k)
+    return {
+        "family": family, "n": n, "k": k, "rows": m,
+        "non_roofline": non_roofline,
+        "cascade_fused_fwd_us": _time(fwd, x, a, d, iters=iters,
+                                      trials=trials),
+        "cascade_bwd_us": _time(bwd, x, a, d, g, iters=iters,
+                                trials=trials),
+        "roofline_bytes_per_row": {
+            "fwd_fused": rb["fwd_cascade_fused"],
+            "bwd_reverse_sweep": rb["bwd_cascade_reverse_sweep"],
         },
     }
 
@@ -346,8 +391,19 @@ def main(csv: bool = True, argv=None) -> dict:
         "cascade_bytes_model": {
             str(k): per_row_bytes(256, k) for k in cascade_ks
         },
+        # One fused cascade per registered transform family (same kernel
+        # bodies, different C/C^T operands — bytes/row identical by
+        # construction, wall-clock recorded per family).
+        "cascade_families": [
+            bench_cascade_family(fam, 256, 3, m, iters, trials, interpret)
+            for fam in ("acdc", "circulant", "hadamard")
+        ],
     }
     _assert_cascade_bwd_claims(out, dispatch_before)
+    fam_bytes = {tuple(sorted(r["roofline_bytes_per_row"].items()))
+                 for r in out["cascade_families"]}
+    assert len(fam_bytes) == 1, (
+        "family-invariant bytes/row model broke: " + repr(fam_bytes))
 
     paged_dispatch_before = dict(ops.PAGED_ATTN_DISPATCHES)
     paged_mbs = (4, 8) if args.quick else (4, 8, 16)
@@ -378,6 +434,12 @@ def main(csv: bool = True, argv=None) -> dict:
             print(f"kernels_cascade_per_layer_k{row['k']},"
                   f"{row['cascade_per_layer_fwd_us']:.2f},"
                   f"bytes_row={row['roofline_bytes_per_row']['per_layer']}")
+        for row in out["cascade_families"]:
+            print(f"kernels_cascade_{row['family']}_k{row['k']},"
+                  f"{row['cascade_fused_fwd_us']:.2f},"
+                  f"bwd_us={row['cascade_bwd_us']:.2f};"
+                  f"bytes_row="
+                  f"{row['roofline_bytes_per_row']['fwd_fused']}")
         for row in out["cascade_bwd"]:
             print(f"kernels_cascade_bwd_sweep_k{row['k']},"
                   f"{row['reverse_sweep_us']:.2f},"

@@ -91,6 +91,30 @@ def get_smoke_config(arch: str) -> ModelConfig:
     return mod.SMOKE
 
 
+def with_sell(
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    method: str = "auto",
+    transform: str = "acdc",
+) -> ModelConfig:
+    """Return ``cfg`` with its projections swapped for a SELL variant.
+
+    Shared by the train/serve launchers so every entry point spells SELL
+    overrides identically.  ``kind='dense'`` is the no-op baseline;
+    ``transform`` picks the cascade's transform family (core/families.py,
+    only meaningful for ``kind='acdc'``).  The transform name is validated
+    here, at config-build time, so a typo fails before any tracing starts.
+    """
+    if kind == "dense":
+        return cfg
+    from repro.core import families as families_mod
+
+    families_mod.get_family(transform)  # raises with the registered list
+    return dataclasses.replace(
+        cfg, sell_kind=kind, sell_method=method, sell_transform=transform)
+
+
 # ---------------------------------------------------------------------------
 # input_specs — ShapeDtypeStruct stand-ins for the dry-run.
 # ---------------------------------------------------------------------------

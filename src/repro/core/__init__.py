@@ -1,6 +1,26 @@
 """Core contribution of the paper: the ACDC structured efficient linear
 layer, its deep cascades, and the SELL baseline zoo it is compared to.
 
+The cascade's transform ``C`` is pluggable: any :class:`TransformFamily`
+registered in :mod:`repro.core.families` supplies the orthonormal matrix
+pair, the O(N log N) fast apply/inverse, the riffle policy and the
+identity-init recipe.  Registered families:
+
+==========  =====================  ==========  ============  ===============
+family      transform C            param       size rule     identity init
+==========  =====================  ==========  ============  ===============
+acdc        DCT-II (orthonormal)   real diag   any N         N(1, std^2)
+circulant   real-DFT basis         real diag   any N         N(1, std^2)
+hadamard    Walsh-Hadamard / sqrt  real diag   N = 2^p       N(1, std^2)
+==========  =====================  ==========  ============  ===============
+
+All three satisfy ``C^-1 = C^T`` (real orthonormal), which is the only
+property the paper's backward (eqs. 10-14) and the fused Pallas kernels
+rely on — so every family gets the fused forward/backward cascade kernels
+for free.  The ``afdf`` SELL kind (complex diagonals) stays a separate
+theory oracle in :mod:`repro.core.sell`; it is not a registry family
+because its diagonals are complex and the MXU path must stay real.
+
 NOTE: the single-layer function ``repro.core.acdc.acdc`` is intentionally
 NOT re-exported at package level — it would shadow the ``acdc`` submodule.
 """
@@ -11,6 +31,10 @@ from repro.core.acdc import (  # noqa: F401
     acdc_cascade_dense_equivalent,
     acdc_rectangular,
     init_acdc_params,
+)
+from repro.core.families import (  # noqa: F401
+    TransformFamily,
+    get_family,
 )
 from repro.core.sell import (  # noqa: F401
     SellConfig,

@@ -4,8 +4,11 @@ A single ACDC layer computes (row-vector convention, as in the paper)::
 
     y = x . A . C . D . C^-1
 
-with ``A = diag(a)``, ``D = diag(d)`` learned real diagonals and ``C`` the
-orthonormal DCT-II.  O(N) parameters, O(N log N) FLOPs.
+with ``A = diag(a)``, ``D = diag(d)`` learned real diagonals and ``C`` an
+orthonormal transform — the paper's DCT-II by default, or any registered
+:mod:`repro.core.families` family (``family='circulant'`` swaps in the
+real-DFT basis, ``'hadamard'`` the normalized Walsh-Hadamard).  O(N)
+parameters, O(N log N) FLOPs for every family.
 
 This module provides:
 
@@ -31,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import transforms
+from repro.core import families as families_mod
 
 Method = Literal["auto", "fft", "matmul", "pallas"]
 
@@ -41,7 +44,6 @@ Method = Literal["auto", "fft", "matmul", "pallas"]
 # instead of this crossover.  On CPU (tests) "auto" resolves to fft for
 # large N.
 MATMUL_MAX_N = 4096
-_MATMUL_MAX_N = MATMUL_MAX_N  # back-compat alias
 
 
 # ---------------------------------------------------------------------------
@@ -61,15 +63,18 @@ def acdc(
     bias: Optional[jax.Array] = None,
     *,
     method: Method = "auto",
+    family: str = "acdc",
 ) -> jax.Array:
-    """One ACDC layer along the last axis of ``x``.
+    """One structured layer ``y = ((x*a) C * d + bias) C^-1`` along the
+    last axis of ``x``, with ``C`` drawn from the ``family`` registry.
 
     ``bias`` (if given) is the paper's bias-on-D: added after the ``D``
-    scaling, in the transform domain, before the inverse DCT.
+    scaling, in the transform domain, before the inverse transform.
     """
     n = x.shape[-1]
     if a.shape[-1] != n or d.shape[-1] != n:
         raise ValueError(f"diagonal size mismatch: x={n} a={a.shape} d={d.shape}")
+    fam = families_mod.get_family(family)
     m = _resolve_method(n, method)
     if m == "pallas":
         # fp32 master diagonals go to the kernel UNCAST: it upcasts every
@@ -78,7 +83,7 @@ def acdc(
         # dtype (x) decides the output dtype.
         from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.acdc_fused_op(x, a, d, bias)
+        return kernel_ops.acdc_fused_op(x, a, d, bias, family=family)
     # jnp fft/matmul paths carry the activation dtype: fp32 master
     # diagonals are cast down so a bf16 residual stream stays bf16
     # through the cascade (scan carries).
@@ -87,16 +92,16 @@ def acdc(
     bias = bias.astype(x.dtype) if bias is not None else None
     h1 = x * a
     if m == "matmul":
-        h2 = transforms.dct_via_matmul(h1)
+        h2 = jnp.matmul(h1, fam.matrix(n, x.dtype))
     else:
-        h2 = transforms.dct(h1)
+        h2 = fam.apply(h1)
     h3 = h2 * d
     if bias is not None:
         h3 = h3 + bias
     if m == "matmul":
-        y = transforms.idct_via_matmul(h3)
+        y = jnp.matmul(h3, fam.inverse_matrix(n, x.dtype))
     else:
-        y = transforms.idct(h3)
+        y = fam.inverse(h3)
     return y
 
 
@@ -106,7 +111,7 @@ def acdc(
 
 @dataclasses.dataclass(frozen=True)
 class ACDCConfig:
-    """Configuration of an order-K ACDC cascade."""
+    """Configuration of an order-K structured-transform cascade."""
 
     n: int                       # feature size
     k: int = 1                   # number of stacked ACDC layers
@@ -117,6 +122,7 @@ class ACDCConfig:
     init_std: float = 0.061      # paper section 6.2 value
     first_a_identity: bool = False  # Definition 1 convention A_1 = I
     method: Method = "auto"
+    family: str = "acdc"         # transform family (core/families.py)
 
     def param_count(self) -> int:
         per = 2 * self.n + (self.n if self.bias else 0)
@@ -126,12 +132,13 @@ class ACDCConfig:
 def init_acdc_params(rng: jax.Array, cfg: ACDCConfig, dtype=jnp.float32) -> dict:
     """Stacked cascade parameters: each leaf has leading dim ``k``.
 
-    Initialization follows the paper: diagonals ~ N(init_mean, init_std^2)
-    (identity + symmetry-breaking noise); biases start at zero.
+    Initialization delegates to the family's identity-init recipe; the
+    default is the paper's diagonals ~ N(init_mean, init_std^2)
+    (identity + symmetry-breaking noise).  Biases start at zero.
     """
-    ra, rd = jax.random.split(rng)
-    a = cfg.init_mean + cfg.init_std * jax.random.normal(ra, (cfg.k, cfg.n), dtype)
-    d = cfg.init_mean + cfg.init_std * jax.random.normal(rd, (cfg.k, cfg.n), dtype)
+    fam = families_mod.get_family(cfg.family)
+    a, d = fam.init_diagonals(rng, cfg.k, cfg.n, cfg.init_mean,
+                              cfg.init_std, dtype)
     if cfg.first_a_identity:
         a = a.at[0].set(jnp.ones((cfg.n,), dtype))
     params = {"a": a, "d": d}
@@ -162,17 +169,20 @@ def acdc_cascade(params: dict, x: jax.Array, cfg: ACDCConfig) -> jax.Array:
 
         return kernel_ops.acdc_cascade_op(
             x, params["a"], params["d"], params.get("bias"),
-            relu=cfg.relu, permute=cfg.permute)
-    perm = jnp.asarray(transforms.make_riffle(n)) if cfg.permute else None
+            relu=cfg.relu, permute=cfg.permute, family=cfg.family)
+    fam = families_mod.get_family(cfg.family)
+    perm = jnp.asarray(fam.riffle(n)) if cfg.permute else None
 
     if cfg.k == 1:
         layer0 = jax.tree.map(lambda p: p[0], params)
-        return acdc(x, layer0["a"], layer0["d"], layer0.get("bias"), method=cfg.method)
+        return acdc(x, layer0["a"], layer0["d"], layer0.get("bias"),
+                    method=cfg.method, family=cfg.family)
 
     # Interleavings (ReLU / permutation) apply BETWEEN layers, not after the
     # last one, matching the paper's CaffeNet stack.
     def scan_body(h, layer):
-        y = acdc(h, layer["a"], layer["d"], layer.get("bias"), method=cfg.method)
+        y = acdc(h, layer["a"], layer["d"], layer.get("bias"),
+                 method=cfg.method, family=cfg.family)
         if cfg.relu:
             y = jax.nn.relu(y)
         if perm is not None:
@@ -183,7 +193,8 @@ def acdc_cascade(params: dict, x: jax.Array, cfg: ACDCConfig) -> jax.Array:
     head = jax.tree.map(lambda p: p[:-1], params)
     last = jax.tree.map(lambda p: p[-1], params)
     h, _ = jax.lax.scan(scan_body, x, head)
-    return acdc(h, last["a"], last["d"], last.get("bias"), method=cfg.method)
+    return acdc(h, last["a"], last["d"], last.get("bias"),
+                method=cfg.method, family=cfg.family)
 
 
 def acdc_cascade_dense_equivalent(params: dict, cfg: ACDCConfig) -> jax.Array:

@@ -1,0 +1,167 @@
+"""Pluggable structured-transform families behind one registry.
+
+The paper's layer is ``y = x . A . C . D . C^-1`` with ``C`` the DCT-II,
+but nothing downstream of the transform choice cares WHICH ``C`` it is:
+the backward formulas (paper eqs. 10-14), the fused Pallas kernel stack
+(which already takes ``C``/``C^T`` as operands), and the identity+noise
+init are all valid for any real matrix with ``C^-1 = C^T``.  A
+:class:`TransformFamily` packages everything a structured-linear layer
+needs to know about its transform:
+
+* ``matrix`` / ``inverse_matrix`` — the explicit orthonormal ``N x N``
+  operand pair (MXU matmul path, Pallas kernel operands, test oracle);
+* ``apply`` / ``inverse``         — the fast O(N log N) functional path;
+* ``complex_diagonals``           — diagonal parameterization (every
+  registered family is real; the AFDF theory oracle in ``core/sell.py``
+  stays a separate complex code path);
+* ``riffle``                      — the between-layer permutation policy
+  ("adjacent SELLs are incoherent", paper section 6.2);
+* ``init_diagonals``              — the identity-init recipe (identity +
+  symmetry-breaking noise works for any orthonormal ``C``);
+* ``valid_size``                  — rounds a requested feature size up to
+  one the transform supports (Hadamard needs powers of two).
+
+Registered families:
+
+====================  =======================  ===========================
+name                  transform                notes
+====================  =======================  ===========================
+``acdc``              DCT-II (paper eq. 9)     the paper's layer,
+                                               bit-identical to the
+                                               pre-registry code path
+``circulant``         real-DFT basis           diagonal-circulant networks
+                      (2x2-block real form      (Araujo et al., 1901.10255)
+                      of the FFT)               with the MXU path kept real
+``hadamard``          Walsh-Hadamard / sqrt n  Fastfood's transform
+                                               (Yang et al., 2015); sizes
+                                               rounded up to powers of two
+====================  =======================  ===========================
+
+Follow-on candidates recorded in ROADMAP.md: matrix product operators
+(Gao et al., 1904.06194) and DCT-perceptron conv layers (2211.08577).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import transforms
+
+__all__ = [
+    "TransformFamily",
+    "register",
+    "get_family",
+    "available",
+    "default_init_diagonals",
+]
+
+
+def default_init_diagonals(rng: jax.Array, k: int, n: int, mean: float,
+                           std: float, dtype=jnp.float32
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Paper section 6.2 identity+noise: a, d ~ N(mean, std^2), stacked
+    ``(k, n)``.  ``C . C^-1 = I`` for any orthonormal family, so starting
+    both diagonals near 1 starts every family's layer near identity.
+    The split/normal call order is frozen: the ``acdc`` golden pins
+    (tests/goldens) assert bit-identical streams from this exact code.
+    """
+    ra, rd = jax.random.split(rng)
+    a = mean + std * jax.random.normal(ra, (k, n), dtype)
+    d = mean + std * jax.random.normal(rd, (k, n), dtype)
+    return a, d
+
+
+def _identity_size(n: int) -> int:
+    return n
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformFamily:
+    """Everything a structured linear layer needs about its transform."""
+
+    name: str
+    #: explicit orthonormal matrix C, row-vector convention y = x @ C
+    matrix: Callable[..., jax.Array]
+    #: C^-1 (= C^T for every registered family)
+    inverse_matrix: Callable[..., jax.Array]
+    #: fast O(N log N) y = x @ C along the last axis
+    apply: Callable[[jax.Array], jax.Array]
+    #: fast O(N log N) x = y @ C^-1 along the last axis
+    inverse: Callable[[jax.Array], jax.Array]
+    #: diagonal parameterization: False = real a/d (all registered
+    #: families; the Pallas kernels require it)
+    complex_diagonals: bool = False
+    #: between-layer permutation policy (indices for size n)
+    riffle: Callable[[int], np.ndarray] = transforms.make_riffle
+    #: identity-init recipe -> (a, d), each (k, n)
+    init_diagonals: Callable[..., Tuple[jax.Array, jax.Array]] = \
+        default_init_diagonals
+    #: rounds a requested size up to one the transform supports
+    valid_size: Callable[[int], int] = _identity_size
+
+    def matrices(self, n: int, dtype=jnp.float32
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """The ``(C, C^-1)`` operand pair at size ``n``."""
+        return self.matrix(n, dtype), self.inverse_matrix(n, dtype)
+
+
+_REGISTRY: Dict[str, TransformFamily] = {}
+
+
+def register(family: TransformFamily) -> TransformFamily:
+    """Add a family to the registry (last registration wins, so tests can
+    shadow); returns it so definitions read as assignments."""
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> TransformFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transform family {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The built-in zoo.
+# ---------------------------------------------------------------------------
+
+ACDC = register(TransformFamily(
+    name="acdc",
+    matrix=transforms.dct_matrix,
+    inverse_matrix=transforms.idct_matrix,
+    apply=transforms.dct,
+    inverse=transforms.idct,
+))
+
+CIRCULANT = register(TransformFamily(
+    name="circulant",
+    matrix=transforms.real_fft_matrix,
+    inverse_matrix=transforms.real_ifft_matrix,
+    apply=transforms.real_fft,
+    inverse=transforms.real_ifft,
+))
+
+HADAMARD = register(TransformFamily(
+    name="hadamard",
+    matrix=transforms.hadamard_matrix,
+    inverse_matrix=transforms.hadamard_matrix,  # involutive: H = H^-1
+    apply=transforms.fwht,
+    inverse=transforms.fwht,
+    valid_size=_next_pow2,
+))

@@ -38,14 +38,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import acdc as acdc_mod
-from repro.core import transforms
+from repro.core import families as families_mod
 
 SellKind = Literal["dense", "low_rank", "circulant", "fastfood", "acdc", "afdf"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SellConfig:
-    """Config for one structured linear ``n_in -> n_out``."""
+    """Config for one structured linear ``n_in -> n_out``.
+
+    ``kind`` selects the SELL baseline; for ``kind='acdc'`` the
+    ``transform`` field additionally selects the cascade's transform
+    family from :mod:`repro.core.families` (``'acdc'`` = the paper's DCT,
+    ``'circulant'`` = real-DFT basis, ``'hadamard'`` = Walsh-Hadamard).
+    Note the distinction from ``kind='circulant'``: that is Cheng et
+    al.'s learned-convolution baseline ``y = x diag(a) R``, while
+    ``kind='acdc', transform='circulant'`` is the paper's A.C.D.C^-1
+    cascade with the transform swapped for the real FFT basis.
+    """
 
     kind: SellKind = "dense"
     n_in: int = 0
@@ -60,6 +70,8 @@ class SellConfig:
     # kernel (per-layer fallback above its VMEM budget); 'auto' picks
     # matmul/fft by size.
     method: acdc_mod.Method = "auto"
+    # transform family for kind='acdc' cascades (core/families.py)
+    transform: str = "acdc"
     # low-rank
     rank: int = 0
     # dense init
@@ -70,12 +82,20 @@ class SellConfig:
 
     @property
     def n_op(self) -> int:
-        """Internal (padded square) operating size for transform SELLs."""
+        """Internal (padded square) operating size for transform SELLs.
+
+        Lane alignment first, then the family's size rule on top (the
+        Hadamard-based families need powers of two; DCT/real-FFT accept
+        any size, so their rule is the identity).
+        """
         if self.kind == "fastfood":
-            # Hadamard needs a power of two.
             n = max(self.n_in, self.n_out)
-            return 1 << int(np.ceil(np.log2(n)))
-        return acdc_mod.rectangular_size(self.n_in, self.n_out, self.lane_multiple)
+            return families_mod.get_family("hadamard").valid_size(n)
+        n = acdc_mod.rectangular_size(self.n_in, self.n_out,
+                                      self.lane_multiple)
+        if self.kind == "acdc":
+            n = families_mod.get_family(self.transform).valid_size(n)
+        return n
 
     def param_count(self) -> int:
         n, ni, no = self.n_op, self.n_in, self.n_out
@@ -166,6 +186,7 @@ def _acdc_cfg(cfg: SellConfig) -> acdc_mod.ACDCConfig:
         bias=cfg.bias,
         init_std=cfg.init_std,
         method=cfg.method,
+        family=cfg.transform,
     )
 
 
@@ -205,13 +226,18 @@ def structured_linear(params: dict, x: jax.Array, cfg: SellConfig) -> jax.Array:
             y = y + params["b"].astype(x.dtype)
         return y
     if cfg.kind == "fastfood":
+        # The Hadamard applications route through the family registry
+        # (same normalized fwht the 'hadamard' cascade family uses) — the
+        # transform is shared, only the D1 H P D2 H D3 wiring is
+        # Fastfood-specific.
+        had = families_mod.get_family("hadamard")
         perm = jnp.asarray(
             np.random.RandomState(n).permutation(n).astype(np.int32))
         h = h * params["d3"].astype(x.dtype)
-        h = transforms.fwht(h)
+        h = had.apply(h)
         h = h * params["d2"].astype(x.dtype)
         h = jnp.take(h, perm, axis=-1)
-        h = transforms.fwht(h)
+        h = had.apply(h)
         h = h * params["d1"].astype(x.dtype)
         y = h[..., : cfg.n_out]
         if cfg.bias:

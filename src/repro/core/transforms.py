@@ -29,6 +29,11 @@ __all__ = [
     "idct",
     "dct_via_matmul",
     "idct_via_matmul",
+    "real_fft_matrix",
+    "real_ifft_matrix",
+    "real_fft",
+    "real_ifft",
+    "hadamard_matrix",
     "fwht",
     "make_riffle",
     "invert_permutation",
@@ -139,8 +144,103 @@ def idct(y: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Fast Walsh-Hadamard (for the Fastfood baseline).
+# Real FFT basis (the `circulant` family: A.F.D.F^-1 kept real).
+#
+# The complex DFT diagonalizes circulant matrices, but a complex transform
+# would force complex diagonals and a complex MXU path.  Instead we use the
+# real orthonormal trigonometric basis — the real 2x2-block form of the
+# DFT: columns [dc, cos_1, sin_1, cos_2, sin_2, ..., (nyquist if n even)].
+# Conjugating a pair-aligned diagonal by this basis spans exactly the
+# rotation-scaled circulant algebra while every operand stays real, so the
+# same Pallas kernels (which only need C real with C^-1 = C^T) apply.
 # ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _real_fft_matrix_np(n: int) -> np.ndarray:
+    """Orthonormal real-DFT basis as float64 numpy (cached host-side)."""
+    m = np.arange(n)[:, None].astype(np.float64)
+    cols = [np.full((n, 1), 1.0 / np.sqrt(n))]
+    for k in range(1, (n - 1) // 2 + 1):
+        theta = 2.0 * np.pi * k * m / n
+        cols.append(np.sqrt(2.0 / n) * np.cos(theta))
+        cols.append(np.sqrt(2.0 / n) * np.sin(theta))
+    if n % 2 == 0:
+        cols.append(((-1.0) ** np.arange(n))[:, None] / np.sqrt(n))
+    return np.concatenate(cols, axis=1)  # (n, n): y = x @ F
+
+
+def real_fft_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal real-DFT basis ``F`` with ``y = x @ F``; ``F^-1 = F.T``."""
+    return jnp.asarray(_real_fft_matrix_np(n), dtype=dtype)
+
+
+def real_ifft_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`real_fft_matrix`, i.e. its transpose."""
+    return jnp.asarray(_real_fft_matrix_np(n).T, dtype=dtype)
+
+
+def real_fft(x: jax.Array) -> jax.Array:
+    """Orthonormal real-DFT along the last axis, O(N log N) via rFFT.
+
+    Matches ``x @ real_fft_matrix(N)`` to float tolerance.
+    """
+    n = x.shape[-1]
+    in_dtype = x.dtype
+    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)  # (..., n//2 + 1)
+    npair = (n - 1) // 2
+    dc = xf[..., :1].real / np.sqrt(n)
+    mid = xf[..., 1:1 + npair]
+    # cos_k picks up Re X[k], sin_k picks up -Im X[k] (rfft convention
+    # e^{-i theta}: X[k] = sum_m x_m (cos - i sin)).
+    s = np.sqrt(2.0 / n)
+    pairs = jnp.stack([s * mid.real, -s * mid.imag], axis=-1)
+    pairs = pairs.reshape(*pairs.shape[:-2], 2 * npair)
+    parts = [dc, pairs]
+    if n % 2 == 0:
+        parts.append(xf[..., -1:].real / np.sqrt(n))
+    return jnp.concatenate(parts, axis=-1).astype(in_dtype)
+
+
+def real_ifft(y: jax.Array) -> jax.Array:
+    """Inverse of :func:`real_fft` (orthonormal, so the adjoint)."""
+    n = y.shape[-1]
+    in_dtype = y.dtype
+    yf = y.astype(jnp.float32)
+    npair = (n - 1) // 2
+    # rebuild the one-sided complex spectrum of the "backward"-norm irfft:
+    # X[0] = y_dc sqrt(n); X[k] = (y_cos - i y_sin) sqrt(n/2);
+    # X[n/2] = y_nyq sqrt(n).
+    dc = (yf[..., :1] * np.sqrt(n)).astype(jnp.complex64)
+    pairs = yf[..., 1:1 + 2 * npair]
+    pairs = pairs.reshape(*pairs.shape[:-1], npair, 2)
+    mid = ((pairs[..., 0] - 1j * pairs[..., 1])
+           * np.sqrt(n / 2.0)).astype(jnp.complex64)
+    parts = [dc, mid]
+    if n % 2 == 0:
+        parts.append((yf[..., -1:] * np.sqrt(n)).astype(jnp.complex64))
+    spec = jnp.concatenate(parts, axis=-1)
+    return jnp.fft.irfft(spec, n=n, axis=-1).astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard (the `hadamard` family / Fastfood baseline).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _hadamard_matrix_np(n: int) -> np.ndarray:
+    """Normalized Sylvester-Hadamard matrix ``H/sqrt(n)`` (cached)."""
+    if n < 1 or n & (n - 1):
+        raise ValueError(f"Hadamard needs a power-of-two size, got {n}")
+    h = np.ones((1, 1))
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h / np.sqrt(n)
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal Hadamard matrix; symmetric and involutive (H = H^-1)."""
+    return jnp.asarray(_hadamard_matrix_np(n), dtype=dtype)
+
 
 def fwht(x: jax.Array, *, normalize: bool = True) -> jax.Array:
     """Fast Walsh-Hadamard transform along the last axis (N must be 2^k)."""

@@ -8,6 +8,16 @@ against ShapeDtypeStructs without allocating anything.
 State layout (a plain dict pytree, checkpoint- and eval_shape-friendly)::
 
     {"params": <model params>, "opt": <optimizer state>, "step": int32[]}
+
+SELL routing note: the step builders are transform-family agnostic.  The
+``sell_kind`` / ``sell_method`` / ``sell_transform`` trio lives entirely
+inside ``cfg`` (models/common.py) and is consumed by
+``models.linear._sell_cfg`` at trace time — a family swap changes the
+traced computation (which ``C`` matrices the kernels receive, which
+autotune cache line feeds ``bm``) but not the state tree's structure, the
+shardings, or anything this module builds.  The SELL param-group LR
+multipliers in launch/train.py key on param-tree paths (``sell/a`` etc.),
+which are also family-invariant.
 """
 
 from __future__ import annotations

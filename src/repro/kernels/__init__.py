@@ -78,4 +78,22 @@ lives in ``ops.paged_attn_route`` (counted in ``PAGED_ATTN_DISPATCHES``):
 fused on TPU (or when forced via ``REPRO_PAGED_ATTN=fused``) when an
 autotuned ``(page_chunk, head_block)`` fits the per-chunk VMEM budget,
 gather otherwise.
+
+Transform-family support matrix (``core/families.py``): the kernel
+bodies take ``C``/``C^T`` (and the riffle-folded ``C^T[:, perm]``) as
+operands, so every real-orthonormal family runs the SAME kernels — the
+family only changes which matrices ``ops.py`` feeds them and which key
+the autotuner sweeps under::
+
+    family      fused fwd   fused bwd   cascade fwd   cascade bwd   notes
+    acdc        yes         yes         yes           yes           DCT-II
+    circulant   yes         yes         yes           yes           real-DFT
+    hadamard    yes         yes         yes           yes           pow2 N
+
+``autotune.py`` keys its memo/persistent cache on
+``(direction, n, k, dtype, bias, permute, family)`` so a block size
+swept for one family's matrix pair is never reused for another's
+(pre-family 6-field cache entries are migrated on load as ``acdc``).
+A family with ``complex_diagonals=True`` would NOT get the fused paths
+(the kernels are real-only); all registered families are real.
 """

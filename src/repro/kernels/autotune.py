@@ -33,6 +33,14 @@ fallback constants never leak between backends) and reloaded lazily on
 the first TPU-side miss, so repeated ``launch/train`` runs skip the
 first-call on-device sweep.  ``REPRO_AUTOTUNE_CACHE=0`` disables the
 file; ``REPRO_AUTOTUNE_CACHE_PATH`` relocates it.
+
+Keys carry the transform FAMILY (``core/families.py``): the sweep's
+operands are the family's own ``C``/``C^T`` matrices, and a winner swept
+for one family is never served to another (different matrix constant ->
+different VMEM/MXU behavior is possible even at equal shapes).  Entries
+persisted before the family field existed (6-field keys) are migrated on
+load by tagging them ``acdc`` — every pre-family sweep ran the DCT — so
+e.g. a ``circulant`` run can never reuse a DCT-swept block size.
 """
 
 from __future__ import annotations
@@ -46,7 +54,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import transforms
+from repro.core import families as families_mod
 from repro.kernels import acdc_bwd as bwd_mod
 from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
@@ -158,9 +166,15 @@ def _key_str(key: Tuple) -> str:
 
 
 def _key_from_str(s: str) -> Tuple:
-    direction, n, k, dtype, bias, permute = s.split("|")
+    parts = s.split("|")
+    if len(parts) == 6:
+        # pre-family entry: every sweep recorded before the transform
+        # registry existed ran the DCT, so migrate rather than discard —
+        # but NEVER let another family inherit it.
+        parts.append("acdc")
+    direction, n, k, dtype, bias, permute, family = parts
     return (direction, int(n), int(k), dtype,
-            bias == "True", permute == "True")
+            bias == "True", permute == "True", family)
 
 
 def _load_persistent() -> None:
@@ -209,7 +223,7 @@ def _save_persistent(key: Tuple, bm: int) -> None:
 
 
 def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
-                 permute: bool,
+                 permute: bool, family: str = "acdc",
                  interpret: bool) -> Callable[[int], Callable[[], None]]:
     """Build ``build(bm) -> run()``: an AOT-compiled single kernel call on
     sample operands.  Compilation happens in ``build`` (outside the timed
@@ -219,16 +233,16 @@ def _make_runner(direction: str, n: int, k: int, dtype, *, bias: bool,
     first hit inside an enclosing ``jit`` trace."""
     if direction == "paged_attn":
         return _make_paged_runner(n, k, dtype, interpret=interpret)
+    fam = families_mod.get_family(family)
     with jax.ensure_compile_time_eval():
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (SWEEP_ROWS, n), dtype)
-        c = transforms.dct_matrix(n, dtype=jnp.float32)
-        ct = transforms.idct_matrix(n, dtype=jnp.float32)
+        c, ct = fam.matrices(n, jnp.float32)
         if direction in ("cascade", "cascade_bwd"):
             a = jnp.ones((k, n), jnp.float32)
             d = jnp.ones((k, n), jnp.float32)
             b = jnp.zeros((k, n), jnp.float32) if bias else None
-            ct_mid = (ct[:, transforms.make_riffle(n)] if permute else None)
+            ct_mid = (ct[:, fam.riffle(n)] if permute else None)
         else:
             a = jnp.ones((n,), jnp.float32)
             d = jnp.ones((n,), jnp.float32)
@@ -305,7 +319,7 @@ def _make_paged_runner(dh: int, t: int, dtype, *,
 
 def sweep(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
           bias: bool = False, permute: bool = False,
-          interpret: bool = False,
+          family: str = "acdc", interpret: bool = False,
           timer: Optional[Callable[[Callable[[], None]], float]] = None) -> int:
     """Time every in-budget candidate and return the fastest ``bm``.
 
@@ -317,7 +331,7 @@ def sweep(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
     if not cands:
         return _fallback(direction, n, k, bias=bias, permute=permute)
     build = _make_runner(direction, n, k, dtype, bias=bias, permute=permute,
-                         interpret=interpret)
+                         family=family, interpret=interpret)
 
     def default_timer(thunk: Callable[[], None]) -> float:
         thunk()  # warmup outside the timed reps (compile already done)
@@ -334,12 +348,15 @@ def sweep(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
 
 
 def autotuned_bm(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
-                 bias: bool = False, permute: bool = False) -> int:
-    """Memoized block size for ``(N, K, dtype, direction)`` (+ the budget
-    knobs bias/permute): on-device sweep on TPU, fixed fallback elsewhere.
+                 bias: bool = False, permute: bool = False,
+                 family: str = "acdc") -> int:
+    """Memoized block size for ``(N, K, dtype, direction, family)`` (+ the
+    budget knobs bias/permute): on-device sweep on TPU, fixed fallback
+    elsewhere.  ``family`` keys the memo AND shapes the sweep operands —
+    a winner timed on one family's matrices never answers for another's.
     """
     key = (direction, int(n), int(k), jnp.dtype(dtype).name, bool(bias),
-           bool(permute))
+           bool(permute), family)
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
@@ -351,7 +368,8 @@ def autotuned_bm(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
         if hit is not None:
             return hit
         try:
-            bm = sweep(direction, n, k, dtype, bias=bias, permute=permute)
+            bm = sweep(direction, n, k, dtype, bias=bias, permute=permute,
+                       family=family)
             _save_persistent(key, bm)
         except Exception:
             bm = _fallback(direction, n, k, bias=bias, permute=permute)

@@ -35,6 +35,14 @@ The backward formulas are the paper's eqs. (10)-(14):
     dL/dd    = sum_rows h2 * (g C),      h2 = (x*a) C   (recomputed)
     dL/da    = sum_rows x * ((g C * d) C^T)
     dL/dx    = a * ((g C * d) C^T)
+
+Every op takes a ``family`` argument (static, default ``'acdc'``)
+selecting the transform from :mod:`repro.core.families`: the kernels
+only require ``C`` real orthonormal with ``C^-1 = C^T`` — true for the
+DCT-II, the real-DFT basis (``'circulant'``) and the normalized
+Walsh-Hadamard (``'hadamard'``) — so one kernel body serves the whole
+zoo; the family supplies the ``C``/``C^T`` operands, the mid-cascade
+permuted-columns fold, and the autotune cache key.
 """
 
 from __future__ import annotations
@@ -45,6 +53,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import families as families_mod
 from repro.core import transforms
 from repro.kernels import acdc_bwd as bwd_mod
 from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
@@ -103,13 +112,17 @@ def _flatten(x):
     return x.reshape(-1, x.shape[-1]), x.shape
 
 
-def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
+def _family_mats(family, n):
+    """The family's fp32 ``(C, C^T)`` kernel operand pair at size ``n``."""
+    return families_mod.get_family(family).matrices(n, jnp.float32)
+
+
+def _acdc_fwd_impl(x2, a, d, bias, *, family="acdc", interpret):
     n = x2.shape[-1]
-    c = transforms.dct_matrix(n, dtype=jnp.float32)
-    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    c, ct = _family_mats(family, n)
     if n <= fused_mod.MAX_FUSED_N:
         bm = autotune.autotuned_bm("fwd", n, dtype=x2.dtype,
-                                   bias=bias is not None)
+                                   bias=bias is not None, family=family)
         return fused_mod.acdc_fused_pallas(x2, a, d, bias, c, ct, bm=bm,
                                            interpret=interpret)
     # Two-call path: h2 lands in HBM exactly once.  A and D are fused as
@@ -123,15 +136,16 @@ def _acdc_fwd_impl(x2, a, d, bias, *, interpret):
                                         interpret=interpret)
 
 
-def _acdc_bwd_impl(x2, a, d, g2, *, with_bias=True, interpret):
+def _acdc_bwd_impl(x2, a, d, g2, *, family="acdc", with_bias=True,
+                   interpret):
     """Pallas backward dispatch; returns (dx2, da, dd, dbias), diagonal
     grads in fp32 (the VMEM accumulator precision).  ``with_bias=False``
     skips the dbias reduction entirely (dbias comes back ``None``)."""
     n = x2.shape[-1]
-    c = transforms.dct_matrix(n, dtype=jnp.float32)
-    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    c, ct = _family_mats(family, n)
     if n <= fused_mod.MAX_FUSED_N:
-        bm = autotune.autotuned_bm("bwd", n, dtype=x2.dtype, bias=with_bias)
+        bm = autotune.autotuned_bm("bwd", n, dtype=x2.dtype,
+                                   bias=with_bias, family=family)
         return bwd_mod.acdc_bwd_pallas(x2, g2, a, d, c, ct,
                                        with_bias=with_bias, bm=bm,
                                        interpret=interpret)
@@ -140,59 +154,68 @@ def _acdc_bwd_impl(x2, a, d, g2, *, with_bias=True, interpret):
                                      interpret=interpret)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def acdc_fused(x, a, d, bias):
-    """Fused ACDC: ``y = ((x*a) C * d + bias) C^T`` along the last axis."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_bias(family, x, a, d, bias):
     x2, shape = _flatten(x)
-    y = _acdc_fwd_impl(x2, a, d, bias, interpret=_INTERPRET)
+    y = _acdc_fwd_impl(x2, a, d, bias, family=family, interpret=_INTERPRET)
     return y.reshape(shape)
 
 
-def _acdc_vjp_fwd(x, a, d, bias):
-    y = acdc_fused(x, a, d, bias)
-    return y, (x, a, d, bias)
+def _fused_bias_fwd(family, x, a, d, bias):
+    return _fused_bias(family, x, a, d, bias), (x, a, d, bias)
 
 
-def _acdc_vjp_bwd(res, g):
+def _fused_bias_bwd(family, res, g):
     x, a, d, bias = res
     x2, shape = _flatten(x)
     g2, _ = _flatten(g)
-    dx2, da, dd, db = _acdc_bwd_impl(x2, a, d, g2, interpret=_INTERPRET)
+    dx2, da, dd, db = _acdc_bwd_impl(x2, a, d, g2, family=family,
+                                     interpret=_INTERPRET)
     return (dx2.reshape(shape), da.astype(a.dtype), dd.astype(d.dtype),
             db.astype(bias.dtype))
 
 
-acdc_fused.defvjp(_acdc_vjp_fwd, _acdc_vjp_bwd)
+_fused_bias.defvjp(_fused_bias_fwd, _fused_bias_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def acdc_fused_nobias(x, a, d):
-    """Bias-free fused ACDC: ``y = ((x*a) C * d) C^T``.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_nobias(family, x, a, d):
+    x2, shape = _flatten(x)
+    y = _acdc_fwd_impl(x2, a, d, None, family=family, interpret=_INTERPRET)
+    return y.reshape(shape)
+
+
+def _fused_nobias_fwd(family, x, a, d):
+    return _fused_nobias(family, x, a, d), (x, a, d)
+
+
+def _fused_nobias_bwd(family, res, g):
+    x, a, d = res
+    x2, shape = _flatten(x)
+    g2, _ = _flatten(g)
+    dx2, da, dd, _ = _acdc_bwd_impl(x2, a, d, g2, family=family,
+                                    with_bias=False, interpret=_INTERPRET)
+    return dx2.reshape(shape), da.astype(a.dtype), dd.astype(d.dtype)
+
+
+_fused_nobias.defvjp(_fused_nobias_fwd, _fused_nobias_bwd)
+
+
+def acdc_fused(x, a, d, bias, family="acdc"):
+    """Fused layer ``y = ((x*a) C * d + bias) C^T`` along the last axis;
+    ``C`` from the transform family registry."""
+    return _fused_bias(family, x, a, d, bias)
+
+
+def acdc_fused_nobias(x, a, d, family="acdc"):
+    """Bias-free fused layer: ``y = ((x*a) C * d) C^T``.
 
     A separate primitive (not ``acdc_fused`` with zeros): the LM path sets
     ``bias=False`` on every projection, and a dummy zero bias would pay the
     broadcast add in the forward AND a full (M, N) reduction for its VJP on
     every call.
     """
-    x2, shape = _flatten(x)
-    y = _acdc_fwd_impl(x2, a, d, None, interpret=_INTERPRET)
-    return y.reshape(shape)
-
-
-def _acdc_nobias_vjp_fwd(x, a, d):
-    return acdc_fused_nobias(x, a, d), (x, a, d)
-
-
-def _acdc_nobias_vjp_bwd(res, g):
-    x, a, d = res
-    x2, shape = _flatten(x)
-    g2, _ = _flatten(g)
-    dx2, da, dd, _ = _acdc_bwd_impl(x2, a, d, g2, with_bias=False,
-                                    interpret=_INTERPRET)
-    return dx2.reshape(shape), da.astype(a.dtype), dd.astype(d.dtype)
-
-
-acdc_fused_nobias.defvjp(_acdc_nobias_vjp_fwd, _acdc_nobias_vjp_bwd)
+    return _fused_nobias(family, x, a, d)
 
 
 def acdc_fused_op(
@@ -200,38 +223,40 @@ def acdc_fused_op(
     a: jax.Array,
     d: jax.Array,
     bias: Optional[jax.Array] = None,
+    *,
+    family: str = "acdc",
 ) -> jax.Array:
-    """User-facing fused ACDC; dispatches on the optional bias."""
+    """User-facing fused layer; dispatches on the optional bias."""
     if bias is None:
-        return acdc_fused_nobias(x, a, d)
-    return acdc_fused(x, a, d, bias)
+        return _fused_nobias(family, x, a, d)
+    return _fused_bias(family, x, a, d, bias)
 
 
 # ---------------------------------------------------------------------------
 # Order-K cascade: whole-cascade fusion + cascade-level custom VJP.
 # ---------------------------------------------------------------------------
 
-def _cascade_fwd_impl(x2, a, d, bias, relu, permute, *, interpret):
+def _cascade_fwd_impl(x2, a, d, bias, relu, permute, family, *, interpret):
     n = x2.shape[-1]
-    c = transforms.dct_matrix(n, dtype=jnp.float32)
-    ct = transforms.idct_matrix(n, dtype=jnp.float32)
+    fam = families_mod.get_family(family)
+    c, ct = fam.matrices(n, jnp.float32)
     ct_mid = None
     if permute:
         # Fold the riffle into the mid-cascade inverse transform:
         # (z @ C^T)[:, p] == z @ C^T[:, p] — no in-kernel gather.
-        perm = transforms.make_riffle(n)
-        ct_mid = ct[:, perm]
+        ct_mid = ct[:, fam.riffle(n)]
     # Row block autotuned within the VMEM budget left by the transform
     # matrices (fixed pick_bm answer off-device); the dispatcher
     # guaranteed some block fits before routing here.
     bm = autotune.autotuned_bm("cascade", n, a.shape[0], x2.dtype,
-                               bias=bias is not None, permute=permute)
+                               bias=bias is not None, permute=permute,
+                               family=family)
     return cascade_mod.acdc_cascade_pallas(x2, a, d, bias, c, ct, ct_mid,
                                            relu=relu, bm=bm,
                                            interpret=interpret)
 
 
-def _cascade_bwd_fused(relu, permute, x, a, d, bias, g):
+def _cascade_bwd_fused(relu, permute, x, a, d, bias, g, family="acdc"):
     """Reverse-sweep cascade backward: ONE Pallas kernel walks all K
     layers in reverse with the cotangent resident in VMEM, recomputing
     layer inputs on-chip (``acdc_cascade_bwd.py``) — 12N HBM bytes/row
@@ -240,11 +265,12 @@ def _cascade_bwd_fused(relu, permute, x, a, d, bias, g):
     k = a.shape[0]
     x2, shape = _flatten(x)
     g2, _ = _flatten(g)
-    c = transforms.dct_matrix(n, dtype=jnp.float32)
-    ct = transforms.idct_matrix(n, dtype=jnp.float32)
-    ct_mid = ct[:, transforms.make_riffle(n)] if permute else None
+    fam = families_mod.get_family(family)
+    c, ct = fam.matrices(n, jnp.float32)
+    ct_mid = ct[:, fam.riffle(n)] if permute else None
     bm = autotune.autotuned_bm("cascade_bwd", n, k, x2.dtype,
-                               bias=bias is not None, permute=permute)
+                               bias=bias is not None, permute=permute,
+                               family=family)
     dx, da, dd, db = cascade_bwd_mod.acdc_cascade_bwd_pallas(
         x2, g2, a, d, bias, c, ct, ct_mid, relu=relu, bm=bm,
         interpret=_INTERPRET)
@@ -255,7 +281,7 @@ def _cascade_bwd_fused(relu, permute, x, a, d, bias, g):
             db.astype(bias.dtype))
 
 
-def _cascade_bwd_dispatch(relu, permute, x, a, d, bias, g):
+def _cascade_bwd_dispatch(relu, permute, family, x, a, d, bias, g):
     """Primary VJP routing: reverse-sweep kernel when its (deeper) VMEM
     budget fits, else the per-layer HBM-remat scan.  The budgets differ —
     the backward stashes (K-1) row blocks — so a cascade can run fused
@@ -265,12 +291,14 @@ def _cascade_bwd_dispatch(relu, permute, x, a, d, bias, g):
     if cascade_bwd_mod.fits_vmem(n, k, permute=permute,
                                  bias=bias is not None):
         CASCADE_BWD_DISPATCHES["reverse_sweep"] += 1
-        return _cascade_bwd_fused(relu, permute, x, a, d, bias, g)
+        return _cascade_bwd_fused(relu, permute, x, a, d, bias, g,
+                                  family=family)
     CASCADE_BWD_DISPATCHES["per_layer_scan"] += 1
-    return _cascade_bwd_core(relu, permute, x, a, d, bias, g)
+    return _cascade_bwd_core(relu, permute, x, a, d, bias, g,
+                             family=family)
 
 
-def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
+def _cascade_bwd_core(relu, permute, x, a, d, bias, g, family="acdc"):
     """Cascade backward fallback: recompute per-layer inputs to HBM
     (section 5.3 trade at cascade scope — the fused forward stores
     NOTHING but x), then run the fused per-layer backward kernel in
@@ -282,7 +310,7 @@ def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
     interp = _INTERPRET
     perm = inv_perm = None
     if permute:
-        p = transforms.make_riffle(n)
+        p = families_mod.get_family(family).riffle(n)
         perm = jnp.asarray(p)
         inv_perm = jnp.asarray(transforms.invert_permutation(p))
 
@@ -293,7 +321,7 @@ def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
 
     def fstep(h, layer):
         z = _acdc_fwd_impl(h, layer["a"], layer["d"], layer.get("bias"),
-                           interpret=interp)
+                           family=family, interpret=interp)
         hn = jnp.maximum(z, 0) if relu else z
         if perm is not None:
             hn = hn[:, perm]
@@ -313,6 +341,7 @@ def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
     # Last layer: the upstream cotangent applies directly (no interleave
     # after the final layer).
     dh, da_k, dd_k, db_k = _acdc_bwd_impl(h_last, a[-1], d[-1], g2,
+                                          family=family,
                                           with_bias=with_bias,
                                           interpret=interp)
 
@@ -325,7 +354,8 @@ def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
         if relu:
             gz = jnp.where(z_i > 0, gz, jnp.zeros_like(gz))
         dx, da_i, dd_i, db_i = _acdc_bwd_impl(h_i, layer["a"], layer["d"],
-                                              gz, with_bias=with_bias,
+                                              gz, family=family,
+                                              with_bias=with_bias,
                                               interpret=interp)
         return dx, (da_i, dd_i, db_i)
 
@@ -341,58 +371,61 @@ def _cascade_bwd_core(relu, permute, x, a, d, bias, g):
     return dx, da, dd, db
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _cascade_bias(relu, permute, x, a, d, bias):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _cascade_bias(relu, permute, family, x, a, d, bias):
     x2, shape = _flatten(x)
-    y = _cascade_fwd_impl(x2, a, d, bias, relu, permute,
+    y = _cascade_fwd_impl(x2, a, d, bias, relu, permute, family,
                           interpret=_INTERPRET)
     return y.reshape(shape)
 
 
-def _cascade_bias_fwd(relu, permute, x, a, d, bias):
-    return _cascade_bias(relu, permute, x, a, d, bias), (x, a, d, bias)
+def _cascade_bias_fwd(relu, permute, family, x, a, d, bias):
+    return (_cascade_bias(relu, permute, family, x, a, d, bias),
+            (x, a, d, bias))
 
 
-def _cascade_bias_bwd(relu, permute, res, g):
+def _cascade_bias_bwd(relu, permute, family, res, g):
     x, a, d, bias = res
-    return _cascade_bwd_dispatch(relu, permute, x, a, d, bias, g)
+    return _cascade_bwd_dispatch(relu, permute, family, x, a, d, bias, g)
 
 
 _cascade_bias.defvjp(_cascade_bias_fwd, _cascade_bias_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _cascade_nobias(relu, permute, x, a, d):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _cascade_nobias(relu, permute, family, x, a, d):
     x2, shape = _flatten(x)
-    y = _cascade_fwd_impl(x2, a, d, None, relu, permute,
+    y = _cascade_fwd_impl(x2, a, d, None, relu, permute, family,
                           interpret=_INTERPRET)
     return y.reshape(shape)
 
 
-def _cascade_nobias_fwd(relu, permute, x, a, d):
-    return _cascade_nobias(relu, permute, x, a, d), (x, a, d)
+def _cascade_nobias_fwd(relu, permute, family, x, a, d):
+    return _cascade_nobias(relu, permute, family, x, a, d), (x, a, d)
 
 
-def _cascade_nobias_bwd(relu, permute, res, g):
+def _cascade_nobias_bwd(relu, permute, family, res, g):
     x, a, d = res
-    return _cascade_bwd_dispatch(relu, permute, x, a, d, None, g)
+    return _cascade_bwd_dispatch(relu, permute, family, x, a, d, None, g)
 
 
 _cascade_nobias.defvjp(_cascade_nobias_fwd, _cascade_nobias_bwd)
 
 
-def _cascade_per_layer(x, a, d, bias, relu, permute):
+def _cascade_per_layer(x, a, d, bias, relu, permute, family="acdc"):
     """Fallback when the whole cascade exceeds the fused VMEM budget:
     ``lax.scan`` over per-layer fused ops (8KN bytes/row, each layer still
     a fused forward + fused backward)."""
     n = x.shape[-1]
-    perm = jnp.asarray(transforms.make_riffle(n)) if permute else None
+    fam = families_mod.get_family(family)
+    perm = jnp.asarray(fam.riffle(n)) if permute else None
     layers = {"a": a, "d": d}
     if bias is not None:
         layers["bias"] = bias
 
     def body(h, layer):
-        y = acdc_fused_op(h, layer["a"], layer["d"], layer.get("bias"))
+        y = acdc_fused_op(h, layer["a"], layer["d"], layer.get("bias"),
+                          family=family)
         if relu:
             y = jax.nn.relu(y)
         if perm is not None:
@@ -402,7 +435,8 @@ def _cascade_per_layer(x, a, d, bias, relu, permute):
     head = jax.tree.map(lambda p: p[:-1], layers)
     last = jax.tree.map(lambda p: p[-1], layers)
     h, _ = jax.lax.scan(body, x, head)
-    return acdc_fused_op(h, last["a"], last["d"], last.get("bias"))
+    return acdc_fused_op(h, last["a"], last["d"], last.get("bias"),
+                         family=family)
 
 
 def acdc_cascade_op(
@@ -413,25 +447,28 @@ def acdc_cascade_op(
     *,
     relu: bool = False,
     permute: bool = False,
+    family: str = "acdc",
 ) -> jax.Array:
     """Order-K fused cascade: stacked (K, N) diagonals, one kernel.
 
     Dispatch: K == 1 degenerates to the single-layer op; cascades that fit
     the fused kernel's VMEM budget run whole-cascade fused (8N bytes/row,
     independent of K) behind the cascade-level custom VJP; anything larger
-    falls back to the per-layer scan.
+    falls back to the per-layer scan.  ``family`` picks the transform
+    (static — one compiled program per family).
     """
     k = a.shape[0]
     if k == 1:
         return acdc_fused_op(x, a[0], d[0],
-                             None if bias is None else bias[0])
+                             None if bias is None else bias[0],
+                             family=family)
     n = x.shape[-1]
     if not cascade_mod.fits_vmem(n, k, permute=permute,
                                  bias=bias is not None):
-        return _cascade_per_layer(x, a, d, bias, relu, permute)
+        return _cascade_per_layer(x, a, d, bias, relu, permute, family)
     if bias is None:
-        return _cascade_nobias(relu, permute, x, a, d)
-    return _cascade_bias(relu, permute, x, a, d, bias)
+        return _cascade_nobias(relu, permute, family, x, a, d)
+    return _cascade_bias(relu, permute, family, x, a, d, bias)
 
 
 def scaled_matmul(

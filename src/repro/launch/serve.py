@@ -21,7 +21,6 @@ streams are bit-identical to the non-speculative engine).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -165,6 +164,9 @@ def main(argv=None):
     ap.add_argument("--sell-method", default="auto",
                     choices=["auto", "fft", "matmul", "pallas"],
                     help="transform backend for SELL projections")
+    ap.add_argument("--sell-transform", default="acdc",
+                    help="transform family for --sell acdc cascades "
+                         "(core/families.py: acdc | circulant | hadamard)")
     ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
@@ -216,9 +218,8 @@ def main(argv=None):
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
-    if args.sell != "dense":
-        cfg = dataclasses.replace(cfg, sell_kind=args.sell,
-                                  sell_method=args.sell_method)
+    cfg = registry.with_sell(cfg, args.sell, method=args.sell_method,
+                             transform=args.sell_transform)
     model = get_model(cfg)
     rng = jax.random.PRNGKey(0)
     params = model.init(rng, cfg)

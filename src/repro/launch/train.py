@@ -15,7 +15,6 @@ the cluster — the same code path; only the mesh shape changes).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
@@ -45,11 +44,10 @@ SELL_GROUPS = (
 def build(arch: str, smoke: bool, sell: str, seq_len: int,
           global_batch: int, lr: float, total_steps: int,
           accum_steps: int = 1, mesh=None, compress_grads: bool = False,
-          sell_method: str = "auto"):
+          sell_method: str = "auto", sell_transform: str = "acdc"):
     cfg = registry.get_smoke_config(arch) if smoke else registry.get_config(arch)
-    if sell != "dense":
-        cfg = dataclasses.replace(cfg, sell_kind=sell,
-                                  sell_method=sell_method)
+    cfg = registry.with_sell(cfg, sell, method=sell_method,
+                             transform=sell_transform)
     model = get_model(cfg)
     opt = make_optimizer(
         OptimizerConfig(kind="adamw", lr=lr, groups=SELL_GROUPS),
@@ -139,6 +137,9 @@ def main(argv=None):
                     help="transform backend for SELL projections; "
                          "'pallas' runs the fused whole-cascade kernel "
                          "(interpret mode off-TPU)")
+    ap.add_argument("--sell-transform", default="acdc",
+                    help="transform family for --sell acdc cascades "
+                         "(core/families.py: acdc | circulant | hadamard)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -170,7 +171,8 @@ def main(argv=None):
     cfg, model, opt, mesh, jitted, pipeline, state_sh = build(
         args.arch, args.smoke, args.sell, args.seq_len, args.global_batch,
         args.lr, args.steps, args.accum_steps, mesh=mesh,
-        compress_grads=args.compress_grads, sell_method=args.sell_method)
+        compress_grads=args.compress_grads, sell_method=args.sell_method,
+        sell_transform=args.sell_transform)
     compress_dp = dict(mesh.shape)["data"] if args.compress_grads else 0
 
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)

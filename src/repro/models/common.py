@@ -78,6 +78,10 @@ class ModelConfig:
     sell_init_std: float = 0.061     # paper section 6.2 identity+noise scale
     sell_rank: int = 64              # for the low_rank baseline
     sell_method: str = "auto"        # transform backend: auto|fft|matmul|pallas
+    # transform family for sell_kind='acdc' cascades — any name registered
+    # in core/families.py ("acdc" = DCT-II, "circulant" = real-DFT basis,
+    # "hadamard" = Walsh-Hadamard; the latter pads n_op to a power of two).
+    sell_transform: str = "acdc"
     # pin SELL activations to batch-only sharding (feature axis local) so
     # the DCT/FFT never crosses a sharded dim — see linear.py and
     # EXPERIMENTS.md §Perf hillclimb #3 (False reproduces the naive +119x

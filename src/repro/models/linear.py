@@ -35,6 +35,7 @@ def _sell_cfg(cfg: ModelConfig, n_in: int, n_out: int) -> sell_mod.SellConfig:
         init_std=cfg.sell_init_std,
         rank=cfg.sell_rank,
         method=cfg.sell_method,  # type: ignore[arg-type]
+        transform=cfg.sell_transform,
         lane_multiple=128,
     )
 

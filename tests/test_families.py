@@ -1,0 +1,298 @@
+"""Transform-family registry tests (core/families.py) + acdc golden pins.
+
+Three layers of guarantees:
+
+1. registry contract — every registered family supplies a real
+   orthonormal ``(C, C^-1 = C^T)`` pair whose fast apply/inverse match
+   the explicit matrices;
+2. end-to-end parity — ``kind='acdc'`` SELLs under every family and
+   every method (matmul / fft / pallas) agree with their own dense
+   equivalent, and ``--sell-transform`` reaches the serving engine;
+3. bit-identity — ``family='acdc'`` reproduces the pre-registry code
+   EXACTLY: greedy engine token streams and raw fused-cascade VJP words
+   are pinned against ``tests/goldens/acdc_goldens.json`` (regenerate
+   only via ``tests/goldens/gen_acdc_goldens.py`` after an intentional
+   numerics change).
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import acdc as A
+from repro.core import families as F
+from repro.core import sell as S
+
+FAMILIES = ["acdc", "circulant", "hadamard"]
+
+GOLDENS = os.path.join(os.path.dirname(__file__), "goldens",
+                       "acdc_goldens.json")
+
+
+# ---------------------------------------------------------------------------
+# Registry contract.
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert F.available() == ("acdc", "circulant", "hadamard")
+    with pytest.raises(ValueError, match="unknown transform family"):
+        F.get_family("wavelet")
+
+
+def test_register_last_wins():
+    fam = F.get_family("acdc")
+    shadow = dataclasses.replace(fam, complex_diagonals=True)
+    try:
+        F.register(shadow)
+        assert F.get_family("acdc") is shadow
+    finally:
+        F.register(fam)
+    assert F.get_family("acdc") is fam
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n", [16, 128])
+def test_family_matrices_orthonormal(family, n):
+    fam = F.get_family(family)
+    n = fam.valid_size(n)
+    c, ct = fam.matrices(n)
+    np.testing.assert_allclose(np.asarray(c) @ np.asarray(ct), np.eye(n),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ct), np.asarray(c).T, atol=1e-6)
+    assert not fam.complex_diagonals  # Pallas kernels require real diags
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_family_fast_apply_matches_matrix(family):
+    fam = F.get_family(family)
+    n = fam.valid_size(96)
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, n))
+    c, ct = fam.matrices(n)
+    np.testing.assert_allclose(np.asarray(fam.apply(x)),
+                               np.asarray(x @ c), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fam.inverse(fam.apply(x))),
+                               np.asarray(x), atol=1e-4)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_family_riffle_and_init(family):
+    fam = F.get_family(family)
+    n = fam.valid_size(64)
+    perm = fam.riffle(n)
+    assert sorted(perm) == list(range(n))
+    a, d = fam.init_diagonals(jax.random.PRNGKey(1), 3, n, 1.0, 0.05)
+    assert a.shape == d.shape == (3, n)
+    # identity + noise: both diagonals near 1
+    assert abs(float(a.mean()) - 1.0) < 0.05
+    assert abs(float(d.mean()) - 1.0) < 0.05
+
+
+def test_valid_size_rules():
+    assert F.get_family("acdc").valid_size(96) == 96
+    assert F.get_family("circulant").valid_size(96) == 96
+    assert F.get_family("hadamard").valid_size(96) == 128
+    assert F.get_family("hadamard").valid_size(128) == 128
+
+
+# ---------------------------------------------------------------------------
+# End-to-end parity: cascade + SELL dense-equivalent oracle per family.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("method", ["matmul", "fft", "pallas"])
+def test_cascade_methods_agree_per_family(family, method):
+    """All three backends compute the same cascade for every family
+    (matmul is the explicit-matrix oracle)."""
+    n, k = 128, 3
+    oracle = A.ACDCConfig(n=n, k=k, relu=True, permute=True, bias=True,
+                          method="matmul", family=family)
+    cfg = dataclasses.replace(oracle, method=method)
+    p = A.init_acdc_params(jax.random.PRNGKey(2), oracle)
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, n))
+    np.testing.assert_allclose(
+        np.asarray(A.acdc_cascade(p, x, cfg)),
+        np.asarray(A.acdc_cascade(p, x, oracle)),
+        atol=2e-4, rtol=1e-3, err_msg=f"{family}/{method}")
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("method", ["matmul", "pallas"])
+def test_sell_dense_equivalent_oracle_per_family(family, method):
+    """kind='acdc' under any family is linear (no ReLU): applying the
+    SELL must equal multiplying by its materialized dense equivalent,
+    including the rectangular pad/truncate path."""
+    cfg = S.SellConfig(kind="acdc", n_in=40, n_out=72, k=2, permute=True,
+                       bias=False, method=method, transform=family,
+                       lane_multiple=1)
+    p = S.init_sell_params(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 40))
+    w = S.sell_dense_equivalent(p, cfg)
+    assert w.shape == (40, 72)
+    np.testing.assert_allclose(
+        np.asarray(S.structured_linear(p, x, cfg)),
+        np.asarray(x @ w), atol=1e-4, err_msg=f"{family}/{method}")
+
+
+def test_sell_hadamard_pads_to_pow2():
+    cfg = S.SellConfig(kind="acdc", n_in=40, n_out=72, k=2,
+                       transform="hadamard", lane_multiple=1)
+    assert cfg.n_op == 128  # max(40, 72) -> next pow2
+    cfg128 = S.SellConfig(kind="acdc", n_in=40, n_out=72, k=2,
+                          transform="hadamard", lane_multiple=128)
+    assert cfg128.n_op == 128
+
+
+def test_with_sell_helper_validates_transform():
+    from repro.configs import registry
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    out = registry.with_sell(cfg, "acdc", method="pallas",
+                             transform="circulant")
+    assert (out.sell_kind, out.sell_method, out.sell_transform) == \
+        ("acdc", "pallas", "circulant")
+    assert registry.with_sell(cfg, "dense", transform="whatever") is cfg
+    with pytest.raises(ValueError, match="unknown transform family"):
+        registry.with_sell(cfg, "acdc", transform="wavelet")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", ["circulant", "hadamard"])
+def test_engine_serves_every_family(family):
+    """The continuous-batching engine runs end to end with non-DCT
+    families on the fused Pallas path (the acceptance bar for the
+    pluggable-transform refactor)."""
+    from repro.configs import registry
+    from repro.models import get_model
+    from repro.serving import Engine, Request
+
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    cfg = registry.with_sell(cfg, "acdc", method="pallas",
+                             transform=family)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rs = np.random.RandomState(11)
+    reqs = [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab_size,
+                                      size=rs.randint(4, 12)).tolist(),
+                    max_new_tokens=6)
+            for i in range(3)]
+    eng = Engine(model, cfg, params, n_slots=2, max_len=20,
+                 max_prompt_len=12)
+    eng.run(reqs, max_ticks=300)
+    for r in reqs:
+        assert len(r.generated) > 0
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity pins: family='acdc' IS the pre-registry code path.
+# ---------------------------------------------------------------------------
+
+def _goldens():
+    with open(GOLDENS) as f:
+        return json.load(f)
+
+
+def test_goldens_backend_matches():
+    g = _goldens()
+    if g["backend"] != jax.default_backend():
+        pytest.skip(f"goldens captured on {g['backend']}, running on "
+                    f"{jax.default_backend()}")
+
+
+def test_acdc_cascade_vjp_bit_identical_to_goldens():
+    g = _goldens()
+    if g["backend"] != jax.default_backend():
+        pytest.skip("backend mismatch")
+    from repro.kernels import ops
+
+    n, k, m = 128, 3, 8
+    r = jax.random.PRNGKey(41)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    b = 0.05 * jax.random.normal(jax.random.fold_in(r, 3), (k, n))
+    gc = jax.random.normal(jax.random.fold_in(r, 4), (m, n))
+    y, vjp = jax.vjp(
+        lambda x, a, d, b: ops.acdc_cascade_op(x, a, d, b, relu=True,
+                                               permute=True), x, a, d, b)
+    dx, da, dd, db = vjp(gc)
+
+    for name, arr in [("y", y), ("dx", dx), ("da", da), ("dd", dd),
+                      ("db", db)]:
+        flat = np.asarray(arr, np.float32).ravel()
+        want = g["cascade_vjp"][name]
+        got_bits = [int(w) for w in flat[:8].view(np.uint32)]
+        assert got_bits == want["head_bits"], \
+            f"{name}: fused-cascade VJP drifted bitwise from the " \
+            f"pre-registry goldens"
+        assert float(np.float64(flat).sum()) == want["checksum"], name
+
+
+@pytest.mark.slow
+def test_acdc_engine_streams_bit_identical_to_goldens():
+    g = _goldens()
+    if g["backend"] != jax.default_backend():
+        pytest.skip("backend mismatch")
+    from repro.configs import registry
+    from repro.models import get_model
+    from repro.serving import Engine, Request
+
+    cfg = registry.get_smoke_config("qwen3_1_7b")
+    cfg = registry.with_sell(cfg, "acdc", method="pallas")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    rs = np.random.RandomState(7)
+    reqs = [Request(rid=i,
+                    prompt=rs.randint(0, cfg.vocab_size,
+                                      size=rs.randint(4, 12)).tolist(),
+                    max_new_tokens=8)
+            for i in range(5)]
+    assert [r.prompt for r in reqs] == g["engine"]["prompts"]
+    eng = Engine(model, cfg, params, n_slots=2, max_len=24,
+                 max_prompt_len=12)
+    eng.run(reqs, max_ticks=400)
+    got = [list(map(int, r.generated)) for r in reqs]
+    assert got == g["engine"]["generated"], \
+        "greedy engine streams drifted from the pre-registry goldens"
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache: family keying + legacy migration.
+# ---------------------------------------------------------------------------
+
+def test_autotune_key_migration_appends_acdc():
+    from repro.kernels import autotune as at
+    legacy = "fwd|512|1|float32|False|False"
+    assert at._key_from_str(legacy) == \
+        ("fwd", 512, 1, "float32", False, False, "acdc")
+    modern = "cascade_bwd|256|3|bfloat16|True|True|circulant"
+    key = at._key_from_str(modern)
+    assert key == ("cascade_bwd", 256, 3, "bfloat16", True, True,
+                   "circulant")
+    assert at._key_from_str(at._key_str(key)) == key
+
+
+def test_autotune_persistent_migration_isolates_families(tmp_path,
+                                                         monkeypatch):
+    """A pre-family on-disk cache entry must surface as 'acdc' only — a
+    circulant run may never inherit a DCT-swept block size."""
+    from repro.kernels import autotune as at
+
+    path = tmp_path / "autotune_cache.json"
+    path.write_text(json.dumps({
+        "backend": jax.default_backend(),
+        "entries": {"fwd|512|1|float32|False|False": 64},
+    }))
+    monkeypatch.setenv(at.CACHE_ENV + "_PATH", str(path))
+    monkeypatch.setattr(at, "_PERSIST_LOADED", False)
+    monkeypatch.setattr(at, "_CACHE", {})
+    at._load_persistent()
+    acdc_key = ("fwd", 512, 1, "float32", False, False, "acdc")
+    circ_key = ("fwd", 512, 1, "float32", False, False, "circulant")
+    assert at._CACHE[acdc_key] == 64
+    assert circ_key not in at._CACHE

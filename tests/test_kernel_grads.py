@@ -406,3 +406,64 @@ def test_train_step_runs_with_pallas_sell():
         before["reverse_sweep"]
     assert ops.CASCADE_BWD_DISPATCHES["per_layer_scan"] == \
         before["per_layer_scan"]
+
+
+# ---------------------------------------------------------------------------
+# Transform-family parity (core/families.py): the fused kernel stack is
+# family-generic — every registered real-orthonormal family must produce
+# the same forward and cotangents through the fused whole-cascade path as
+# through the per-layer jnp scan.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["acdc", "circulant", "hadamard"])
+@pytest.mark.parametrize("bias", [True, False])
+def test_cascade_grads_fused_matches_scan_per_family(family, bias):
+    n, k, m = 128, 3, 9
+    r = jax.random.PRNGKey(53)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    b = 0.05 * jax.random.normal(jax.random.fold_in(r, 3), (k, n)) \
+        if bias else None
+    g = jax.random.normal(jax.random.fold_in(r, 4), (m, n))
+
+    def fused(x, a, d, b):
+        return ops.acdc_cascade_op(x, a, d, b, relu=True, permute=True,
+                                   family=family)
+
+    def scan(x, a, d, b):
+        return ops._cascade_per_layer(x, a, d, b, True, True,
+                                      family=family)
+
+    if bias:
+        y_f, vjp_f = jax.vjp(fused, x, a, d, b)
+        y_s, vjp_s = jax.vjp(scan, x, a, d, b)
+    else:
+        y_f, vjp_f = jax.vjp(lambda x, a, d: fused(x, a, d, None), x, a, d)
+        y_s, vjp_s = jax.vjp(lambda x, a, d: scan(x, a, d, None), x, a, d)
+    np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_s),
+                               atol=2e-4, rtol=1e-3, err_msg=family)
+    for name, gf, gs in zip(("dx", "da", "dd", "db"),
+                            vjp_f(g), vjp_s(g)):
+        np.testing.assert_allclose(
+            np.asarray(gf), np.asarray(gs), atol=2e-4, rtol=1e-3,
+            err_msg=f"{family} {name} bias={bias}")
+
+
+@pytest.mark.parametrize("family", ["circulant", "hadamard"])
+def test_reverse_sweep_backward_per_family(family):
+    """The reverse-sweep kernel's raw cotangents match the per-layer-scan
+    core for the non-DCT families too (same kernel body, different C)."""
+    n, k, m = 128, 3, 10
+    r = jax.random.PRNGKey(59)
+    x = jax.random.normal(r, (m, n))
+    a = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 1), (k, n))
+    d = 1 + 0.1 * jax.random.normal(jax.random.fold_in(r, 2), (k, n))
+    b = 0.05 * jax.random.normal(jax.random.fold_in(r, 3), (k, n))
+    g = jax.random.normal(jax.random.fold_in(r, 4), (m, n))
+    got = ops._cascade_bwd_fused(True, True, x, a, d, b, g, family=family)
+    want = ops._cascade_bwd_core(True, True, x, a, d, b, g, family=family)
+    for name, gv, wv in zip(("dx", "da", "dd", "db"), got, want):
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(wv),
+                                   atol=2e-4, rtol=1e-3,
+                                   err_msg=f"{family} {name}")

@@ -198,7 +198,7 @@ def test_autotune_cpu_fallback_keeps_fixed_constants():
     assert autotune.autotuned_bm(
         "cascade", 1024, 4, bias=True, permute=True) == cascade_mod.pick_bm(
             1024, 4, permute=True, bias=True)
-    key = ("fwd", 512, 1, "float32", False, False)
+    key = ("fwd", 512, 1, "float32", False, False, "acdc")
     assert autotune._CACHE[key] == fused_mod.DEFAULT_BM
 
 

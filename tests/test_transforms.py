@@ -82,6 +82,54 @@ def test_fwht_rejects_non_pow2():
         T.fwht(jnp.zeros((2, 12)))
 
 
+@pytest.mark.parametrize("n", [2, 16, 128])
+def test_fwht_normalized_involution_explicit(n):
+    """fwht(fwht(x)) == x under normalize=True — the property the
+    'hadamard' family relies on to reuse one function as both apply and
+    inverse (H/sqrt(n) is orthonormal AND symmetric)."""
+    x = np.random.RandomState(1).randn(3, n).astype(np.float32)
+    rec = T.fwht(T.fwht(jnp.asarray(x), normalize=True), normalize=True)
+    np.testing.assert_allclose(np.asarray(rec), x, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 8, 64])
+def test_hadamard_matrix_matches_fwht(n):
+    x = np.random.RandomState(2).randn(3, n).astype(np.float32)
+    h = np.asarray(T.hadamard_matrix(n))
+    np.testing.assert_allclose(h @ h.T, np.eye(n), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(T.fwht(jnp.asarray(x))), x @ h, atol=1e-4)
+
+
+def test_hadamard_matrix_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        T.hadamard_matrix(12)
+
+
+@pytest.mark.parametrize("n", [2, 4, 5, 8, 12, 16, 128])
+def test_real_fft_matrix_orthonormal(n):
+    f = np.asarray(T.real_fft_matrix(n), np.float64)
+    np.testing.assert_allclose(f @ f.T, np.eye(n), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(T.real_ifft_matrix(n)), f.T.astype(np.float32),
+        atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [4, 5, 8, 12, 16, 128])
+def test_real_fft_matches_matrix(n):
+    x = np.random.RandomState(3).randn(3, n).astype(np.float32)
+    f = np.asarray(T.real_fft_matrix(n))
+    got = np.asarray(T.real_fft(jnp.asarray(x)))
+    np.testing.assert_allclose(got, x @ f, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [4, 5, 8, 12, 16, 128])
+def test_real_fft_roundtrip(n):
+    x = np.random.RandomState(4).randn(3, n).astype(np.float32)
+    rec = np.asarray(T.real_ifft(T.real_fft(jnp.asarray(x))))
+    np.testing.assert_allclose(rec, x, atol=1e-4)
+
+
 @given(st.integers(2, 300))
 @settings(max_examples=50, deadline=None)
 def test_riffle_is_permutation(n):
