@@ -65,6 +65,7 @@ from repro.dist import steps as steps_mod
 from repro.kernels import ops
 from repro.kernels import paged_attn
 from repro.models import get_model
+from repro.obs import Observability, SpanTracer, set_global_tracer
 from repro.serving import Engine, Request
 from repro.serving.request import make_ragged_requests
 
@@ -289,14 +290,28 @@ def bench_overload(args):
     deadlocks break by preempt-and-requeue, queued SLOs time out, and the
     degradation ladder may bound the queue.
 
-    Reports p50/p99 TTFT over requests that got a first token plus the
-    preempt / requeue / timeout / shed counters, and asserts the
+    Reports p50/p99 TTFT and TPOT over requests that got a first token
+    plus the preempt / requeue / timeout / shed counters, and asserts the
     overload guarantees: every request reaches a terminal state, NO
     request is killed with ``cache_full`` (the seed's behaviour when the
     pool deadlocked — requeue-with-recompute replaces it), and the page
     pool comes back leak-free.
+
+    The latency percentiles are read from the engine's shared obs
+    histograms (``serve_ttft_seconds`` / ``serve_tpot_seconds``) and
+    cross-checked against the raw per-request lists to within one
+    histogram bin width — the log-bin accuracy contract in
+    ``repro/obs/metrics.py``.  The run is span-traced; the Chrome trace
+    lands in ``results/TRACE_serve_overload.json``.  ``--spec`` serves
+    the overload stream speculatively (ACDC SELL smoke model,
+    truncated-cascade self-draft) so the trace also covers the
+    draft/verify path.
     """
     cfg = registry.get_smoke_config(args.arch)
+    if args.spec:
+        # speculation needs cascades to truncate (see bench_spec)
+        cfg = dataclasses.replace(cfg, sell_kind="acdc", sell_k=4,
+                                  sell_permute=False, sell_init_std=0.02)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg)
     n, gen = args.requests, args.gen
@@ -311,11 +326,20 @@ def bench_overload(args):
     max_prompt = args.prompt_len + gen
     min_pool = -(-(max_prompt + 1) // args.block_size)
     pool = max(min_pool, int(0.6 * demand))
+    tracer = SpanTracer()
+    set_global_tracer(tracer)       # allocator audits ride along
+    obs = Observability(tracer=tracer)
     eng = Engine(model, cfg, params, n_slots=args.slots,
                  max_len=max_prompt + 1, max_prompt_len=max_prompt,
-                 paged=True, block_size=args.block_size, n_blocks=pool)
+                 paged=True, block_size=args.block_size, n_blocks=pool,
+                 spec_k=args.spec_k if args.spec else 0, obs=obs)
     warm = Request(rid=10**6, prompt=[1, 2, 3], max_new_tokens=2)
     eng.run([warm], max_ticks=50)
+    # exclude the compile-warmup request from the reported percentiles
+    h_ttft = obs.registry.get("serve_ttft_seconds")
+    h_tpot = obs.registry.get("serve_tpot_seconds")
+    h_ttft.reset()
+    h_tpot.reset()
 
     # arrivals ~2x faster than the continuous bench: sustained overload
     rs = np.random.RandomState(4)
@@ -345,16 +369,58 @@ def bench_overload(args):
     eng.allocator.audit()
     assert eng.allocator.n_free == eng.allocator.n_blocks
 
+    # latency percentiles come from the SHARED obs histograms; the raw
+    # per-request lists only cross-check them (within one bin width, the
+    # histogram's documented accuracy)
     served = [r.t_first_token - r.t_submit for r in reqs
               if r.t_first_token is not None]
+    tpot = [(r.t_finish - r.t_first_token) / (len(r.generated) - 1)
+            for r in reqs if r.t_first_token is not None
+            and r.t_finish is not None and len(r.generated) > 1]
+    for h, raw in ((h_ttft, served), (h_tpot, tpot)):
+        assert h.count == len(raw), (
+            f"{h.name}: {h.count} observations vs {len(raw)} requests")
+        for q in (50.0, 99.0):
+            hp = h.percentile(q)
+            lp = float(np.percentile(raw, q)) if raw else None
+            if hp is None or lp is None:
+                assert hp is None and lp is None
+                continue
+            tol = max(h.bin_width(hp), h.bin_width(lp))
+            assert abs(hp - lp) <= tol, (
+                f"{h.name} p{q:.0f}: histogram {hp:.4f} vs list {lp:.4f} "
+                f"exceeds one bin width ({tol:.4f})")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "TRACE_serve_overload.json")
+    tracer.write(trace_path)
+    set_global_tracer(None)
+    names = {e["name"] for e in tracer.chrome_trace()["traceEvents"]}
+    assert {"queued", "prefill", "decode"} <= names, (
+        f"trace missing lifecycle spans: {sorted(names)}")
+    if eng.stats["preempted"]:
+        assert {"preempt", "backoff"} <= names
+    if eng.stats["degrade_down"]:
+        assert "ladder" in names
+    for r in reqs:
+        assert len(tracer.terminals_for(r.rid)) == 1, (
+            f"rid={r.rid}: expected exactly one terminal event")
+
     row = {
         "mode": "overload",
         "n_requests": n,
         "pool_blocks": pool,
         "pool_vs_demand": pool / max(demand, 1),
         "finish_reasons": reasons,
-        "ttft_p50_s": float(np.percentile(served, 50)) if served else None,
-        "ttft_p99_s": float(np.percentile(served, 99)) if served else None,
+        "ttft_p50_s": h_ttft.percentile(50),
+        "ttft_p99_s": h_ttft.percentile(99),
+        "ttft_p50_list_s": (float(np.percentile(served, 50))
+                            if served else None),
+        "ttft_p99_list_s": (float(np.percentile(served, 99))
+                            if served else None),
+        "tpot_p50_s": h_tpot.percentile(50),
+        "tpot_p99_s": h_tpot.percentile(99),
+        "trace_out": os.path.relpath(trace_path),
         "preempted": eng.stats["preempted"],
         "requeued": eng.stats["requeued"],
         "deadline_preempts": eng.stats["deadline_preempts"],
@@ -366,6 +432,13 @@ def bench_overload(args):
         "tokens_out": sum(len(r.generated) for r in reqs),
         "total_s": dt,
     }
+    if args.spec:
+        row.update({
+            "spec_k": args.spec_k,
+            "drafted": eng.stats["drafted"],
+            "accepted": eng.stats["accepted"],
+            "acceptance_rate": eng.stats["acceptance_rate"],
+        })
     return row
 
 
@@ -440,9 +513,12 @@ def main(csv: bool = True, argv=None):
             print(f"serve_overload,{row['total_s'] * 1e6:.0f},"
                   f"ttft_p50_s={row['ttft_p50_s']:.3f};"
                   f"ttft_p99_s={row['ttft_p99_s']:.3f};"
+                  f"tpot_p50_s={row['tpot_p50_s']:.4f};"
+                  f"tpot_p99_s={row['tpot_p99_s']:.4f};"
                   f"requeued={row['requeued']};timeout={row['timeout']};"
                   f"rejected={row['rejected']};reasons={fr}")
             print(f"wrote {os.path.relpath(path)}")
+            print(f"wrote {row['trace_out']}")
         return out
 
     cfg = registry.get_smoke_config(args.arch)

@@ -15,6 +15,15 @@ import signal
 import threading
 from typing import List, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+#: every StragglerMonitor flag (training step OR serving tick watchdog)
+#: also lands in the process-global obs registry, so exporters see
+#: straggler pressure without threading the monitor through them
+_FLAGS = obs_metrics.REGISTRY.counter(
+    "straggler_flags_total", "StragglerMonitor outlier flags")
+
 
 def _pow2_floor(n: int) -> int:
     return 1 << (max(n, 1).bit_length() - 1)
@@ -92,6 +101,10 @@ class StragglerMonitor:
                 self._consecutive = 0
                 return False
             self.flagged.append(step)
+            _FLAGS.inc()
+            obs_trace.instant_global("train", "straggler", step=step,
+                                     dt_s=float(dt),
+                                     ewma_s=float(self.ewma))
             return True
         self._consecutive = 0
         self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * float(dt)

@@ -56,6 +56,8 @@ import jax.numpy as jnp
 
 from repro.core import families as families_mod
 from repro.kernels import acdc_bwd as bwd_mod
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.kernels import acdc_cascade_bwd as cascade_bwd_mod
 from repro.kernels import acdc_cascade_fused as cascade_mod
 from repro.kernels import acdc_fused as fused_mod
@@ -80,6 +82,13 @@ _PAGED_SWEEP = {"hkv": 8, "group": 4, "bs": 16, "mb": 16, "rows": 8,
 
 _CACHE: Dict[Tuple, int] = {}
 _PERSIST_LOADED = False
+
+#: real on-device sweeps completed this process, labeled by direction —
+#: fallbacks and memo/persist hits do NOT count (a run that shows zero
+#: sweeps either hit the disk cache or never touched a TPU)
+_SWEEPS = obs_metrics.REGISTRY.counter(
+    "autotune_sweeps_total", "on-device block-size sweeps completed",
+    labels=("direction",))
 
 
 def _fallback(direction: str, n: int, k: int, *, bias: bool,
@@ -371,6 +380,10 @@ def autotuned_bm(direction: str, n: int, k: int = 1, dtype=jnp.float32, *,
             bm = sweep(direction, n, k, dtype, bias=bias, permute=permute,
                        family=family)
             _save_persistent(key, bm)
+            _SWEEPS.labels(direction=direction).inc()
+            obs_trace.instant_global("autotune", "sweep",
+                                     direction=direction,
+                                     key=_key_str(key), winner=int(bm))
         except Exception:
             bm = _fallback(direction, n, k, bias=bias, permute=permute)
     _CACHE[key] = bm

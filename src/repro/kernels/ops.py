@@ -62,6 +62,7 @@ from repro.kernels import acdc_fused as fused_mod
 from repro.kernels import autotune
 from repro.kernels import paged_attn as paged_attn_mod
 from repro.kernels import scaled_matmul as smm_mod
+from repro.obs.metrics import REGISTRY, CounterDict
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -70,14 +71,27 @@ _INTERPRET = jax.default_backend() != "tpu"
 #: increments.  ``reverse_sweep`` is the fused O(1)-in-K kernel;
 #: ``per_layer_scan`` the HBM-remat fallback.  (Counts tracings, not
 #: dispatches — a jit cache hit re-runs the kernel without retracing.)
-CASCADE_BWD_DISPATCHES = {"reverse_sweep": 0, "per_layer_scan": 0}
+#: The historical dict names remain the canonical mutation surface, but
+#: since PR 10 they are shims over labeled counters in the process-
+#: global obs registry — ``kernel_cascade_bwd_dispatches_total{route=}``
+#: — so serving exporters report them alongside engine metrics.
+CASCADE_BWD_DISPATCHES = CounterDict(
+    REGISTRY.counter("kernel_cascade_bwd_dispatches_total",
+                     "trace-time cascade-backward routing decisions",
+                     labels=("route",)),
+    ("reverse_sweep", "per_layer_scan"))
 
 #: trace-time routing of the paged-attention decode/verify step, same
 #: contract as ``CASCADE_BWD_DISPATCHES``: ``fused`` is the block-table
 #: streaming kernel (``paged_attn.py``), ``gather`` the materialized
 #: ``k_pages[tbl]`` fallback kept for over-budget shapes and CPU
-#: interpret runs.
-PAGED_ATTN_DISPATCHES = {"fused": 0, "gather": 0}
+#: interpret runs.  Registry metric:
+#: ``kernel_paged_attn_dispatches_total{route=}``.
+PAGED_ATTN_DISPATCHES = CounterDict(
+    REGISTRY.counter("kernel_paged_attn_dispatches_total",
+                     "trace-time paged-attention routing decisions",
+                     labels=("route",)),
+    ("fused", "gather"))
 
 
 def paged_attn_route(hkv: int, dh: int, group: int, t: int, bs: int,
@@ -251,9 +265,12 @@ def _cascade_fwd_impl(x2, a, d, bias, relu, permute, family, *, interpret):
     bm = autotune.autotuned_bm("cascade", n, a.shape[0], x2.dtype,
                                bias=bias is not None, permute=permute,
                                family=family)
-    return cascade_mod.acdc_cascade_pallas(x2, a, d, bias, c, ct, ct_mid,
-                                           relu=relu, bm=bm,
-                                           interpret=interpret)
+    # named_scope costs only at trace time: it labels the jaxpr/HLO so
+    # profiler captures show the cascade as one named row
+    with jax.named_scope("acdc_cascade_fwd"):
+        return cascade_mod.acdc_cascade_pallas(x2, a, d, bias, c, ct,
+                                               ct_mid, relu=relu, bm=bm,
+                                               interpret=interpret)
 
 
 def _cascade_bwd_fused(relu, permute, x, a, d, bias, g, family="acdc"):
@@ -271,9 +288,10 @@ def _cascade_bwd_fused(relu, permute, x, a, d, bias, g, family="acdc"):
     bm = autotune.autotuned_bm("cascade_bwd", n, k, x2.dtype,
                                bias=bias is not None, permute=permute,
                                family=family)
-    dx, da, dd, db = cascade_bwd_mod.acdc_cascade_bwd_pallas(
-        x2, g2, a, d, bias, c, ct, ct_mid, relu=relu, bm=bm,
-        interpret=_INTERPRET)
+    with jax.named_scope("acdc_cascade_bwd_reverse_sweep"):
+        dx, da, dd, db = cascade_bwd_mod.acdc_cascade_bwd_pallas(
+            x2, g2, a, d, bias, c, ct, ct_mid, relu=relu, bm=bm,
+            interpret=_INTERPRET)
     dx = dx.reshape(shape)
     if bias is None:
         return dx, da.astype(a.dtype), dd.astype(d.dtype)

@@ -30,6 +30,16 @@ import numpy as np
 from repro.configs import registry
 from repro.dist import steps as steps_mod
 from repro.models import get_model
+from repro.obs import (
+    REGISTRY,
+    JsonlExporter,
+    Observability,
+    Prof,
+    ProfileWindow,
+    Registry,
+    SpanTracer,
+    set_global_tracer,
+)
 from repro.serving import Engine
 from repro.serving.request import make_ragged_requests
 
@@ -80,7 +90,40 @@ def run_static(model, cfg, params, args, prompts, rng):
         print("  ", row[:16].tolist())
 
 
+def build_obs(args) -> Observability:
+    """Assemble the observability bundle from the launcher flags.
+
+    With no obs flags set this returns ``Observability.off()`` — the
+    engine's documented noop fast path (see ``repro/obs/__init__.py``).
+    The engine owns the per-engine registry built here; the JSON-lines
+    exporter merges in the process-global ``REGISTRY`` snapshot so the
+    kernels' trace-time dispatch counters ride along.
+    """
+    if not (args.metrics_jsonl or args.trace_out or args.profile_ticks):
+        return Observability.off()
+    reg = Registry()
+    tracer = None
+    if args.trace_out:
+        # clock=None: the tracer adopts the engine's clock at attach
+        tracer = SpanTracer()
+        set_global_tracer(tracer)
+    exporter = None
+    if args.metrics_jsonl:
+        exporter = JsonlExporter(args.metrics_jsonl, reg,
+                                 every=args.metrics_every,
+                                 clock=time.time,
+                                 extra_snapshots=(REGISTRY.snapshot,))
+    window = None
+    prof = None
+    if args.profile_ticks:
+        window = ProfileWindow(args.profile_ticks, args.profile_logdir)
+        prof = Prof(enabled=True)
+    return Observability(registry=reg, tracer=tracer, exporter=exporter,
+                         prof=prof, window=window)
+
+
 def run_engine(model, cfg, params, args, rng):
+    obs = build_obs(args)
     eng = Engine(model, cfg, params, n_slots=args.slots,
                  max_len=args.prompt_len + args.gen + 1,
                  max_prompt_len=args.prompt_len, sample=args.sample,
@@ -89,7 +132,8 @@ def run_engine(model, cfg, params, args, rng):
                  block_size=args.block_size, n_blocks=args.blocks,
                  spec_k=args.spec_k if args.spec else 0,
                  draft_depth=args.draft_depth,
-                 draft_skip_layers=args.spec_skip_layers)
+                 draft_skip_layers=args.spec_skip_layers,
+                 obs=obs)
     if args.spec:
         print(f"[spec] k={eng.spec_k} draft={type(eng.draft).__name__} "
               f"depth={getattr(eng.draft, 'depth', '-')} "
@@ -155,6 +199,18 @@ def run_engine(model, cfg, params, args, rng):
         print(f"   rid={r.rid} len={r.prompt_len} "
               f"finish={r.finish_reason}: {r.generated[:16]}")
 
+    obs.close()
+    if obs.tracer is not None:
+        obs.tracer.write(args.trace_out)
+        print(f"[obs] chrome trace -> {args.trace_out} "
+              f"(load in chrome://tracing or ui.perfetto.dev)")
+    if obs.exporter is not None:
+        print(f"[obs] metrics jsonl -> {args.metrics_jsonl} "
+              f"({obs.exporter.exports} snapshots)")
+    if obs.window is not None:
+        print(f"[obs] profiler capture -> {args.profile_logdir} "
+              f"(ticks {args.profile_ticks})")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -210,11 +266,28 @@ def main(argv=None):
     ap.add_argument("--wall-clock-limit-s", type=float, default=None,
                     help="hard bound on the serve loop's real time; exits "
                          "with partial results instead of hanging")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append periodic registry snapshots (JSON lines) "
+                         "to PATH; off when unset")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    help="ticks between --metrics-jsonl snapshots")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write per-request span tracing as Chrome "
+                         "trace-event JSON to PATH; off when unset")
+    ap.add_argument("--profile-ticks", default=None, metavar="A:B",
+                    help="capture a jax.profiler trace across engine "
+                         "ticks A..B inclusive (see --profile-logdir)")
+    ap.add_argument("--profile-logdir", default="results/profile",
+                    help="destination for the --profile-ticks capture")
     args = ap.parse_args(argv)
     if args.paged and args.static:
         ap.error("--paged applies to the engine path, not --static")
     if args.spec and args.static:
         ap.error("--spec applies to the engine path, not --static")
+    if args.static and (args.metrics_jsonl or args.trace_out
+                        or args.profile_ticks):
+        ap.error("--metrics-jsonl/--trace-out/--profile-ticks apply to "
+                 "the engine path, not --static")
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))

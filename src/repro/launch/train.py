@@ -26,10 +26,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 from repro.configs import registry
 from repro.data import DataConfig, SyntheticLM
-from repro.dist import elastic, sharding as shard_mod, steps as steps_mod
+from repro.dist import compression, elastic, sharding as shard_mod, \
+    steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
-from repro.optim import (OptimizerConfig, cosine_schedule, make_optimizer)
+from repro.obs import REGISTRY, JsonlExporter
+from repro.optim import (OptimizerConfig, cosine_schedule, make_optimizer,
+                         tree_paths)
 
 # The paper's per-group treatment of the SELL diagonals (section 6.2):
 # lr x24 on A, x12 on D, no weight decay on either; norms/bias undecayed.
@@ -95,6 +98,54 @@ def build(arch: str, smoke: bool, sell: str, seq_len: int,
     return cfg, model, opt, mesh, jitted, pipeline, state_sh
 
 
+def _train_metrics():
+    """Training diagnostics in the process-global registry (names are
+    documented in the ``repro/obs/__init__.py`` glossary)."""
+    return {
+        "loss": REGISTRY.gauge("train_step_loss", "last step loss"),
+        "tps": REGISTRY.gauge("train_tokens_per_s",
+                              "last step token throughput"),
+        "step_s": REGISTRY.histogram("train_step_seconds",
+                                     "step wall time (incl. compile on "
+                                     "the first step)"),
+        "wire": REGISTRY.gauge("train_grad_compressed_bytes",
+                               "int8+scales gradient wire bytes per "
+                               "all-reduce"),
+        "raw": REGISTRY.gauge("train_grad_raw_bytes",
+                              "fp32-equivalent gradient bytes per "
+                              "all-reduce"),
+        "diag": REGISTRY.gauge("train_cascade_diag_norm",
+                               "per-cascade SELL diagonal l2 norm",
+                               labels=("param", "cascade")),
+    }
+
+
+def _grad_wire_bytes(params):
+    """Static per-all-reduce payload of the int8 blockwise compressor
+    (int8 payload padded to BLOCK plus one fp32 scale per block) vs the
+    uncompressed fp32 equivalent."""
+    wire = raw = 0
+    for leaf in jax.tree.leaves(params):
+        n = max(int(np.prod(leaf.shape)), 1)
+        nb = -(-n // compression.BLOCK)
+        wire += nb * compression.BLOCK + 4 * nb
+        raw += 4 * n
+    return wire, raw
+
+
+def _emit_diag_norms(gauge, params) -> None:
+    """Per-cascade ||A||_2 / ||D||_2 gauges — the paper's init/depth
+    sensitivity lives in how these diagonals move, so expose them per
+    cascade (labeled by the param path) rather than as one global norm."""
+    paths = jax.tree.leaves(tree_paths(params))
+    for path, leaf in zip(paths, jax.tree.leaves(params)):
+        for suffix in ("a", "d"):
+            if path.endswith(f"sell/{suffix}"):
+                cascade = path[: -len(f"/sell/{suffix}")]
+                gauge.labels(param=suffix, cascade=cascade).set(
+                    float(np.linalg.norm(np.asarray(leaf))))
+
+
 def _restore(ckpt, step, model, cfg, opt, compress_dp, state_sh):
     """Elastic-safe restore: grad_error residuals are an optimization, not
     model state, so a checkpoint that lacks them (compression turned on
@@ -149,6 +200,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append registry snapshots (JSON lines) to PATH "
+                         "on the --log-every cadence; off when unset")
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8 error-feedback gradient all-reduce "
                          "(repro.dist.compression) over the data axis")
@@ -178,6 +232,10 @@ def main(argv=None):
     ckpt = CheckpointManager(args.ckpt_dir, keep=3)
     hb = elastic.Heartbeat().install()
     monitor = elastic.StragglerMonitor()
+    obs = _train_metrics()
+    exporter = (JsonlExporter(args.metrics_jsonl, REGISTRY,
+                              every=args.log_every, clock=time.time)
+                if args.metrics_jsonl else None)
 
     with mesh:
         start_step = 0
@@ -194,6 +252,13 @@ def main(argv=None):
                                          compress_dp=compress_dp)
             state = jax.device_put(state, state_sh)
 
+        if args.compress_grads:
+            wire, raw = _grad_wire_bytes(state["params"])
+            obs["wire"].set(wire)
+            obs["raw"].set(raw)
+            print(f"[compress] grad wire bytes {wire} vs fp32 {raw} "
+                  f"({wire / max(raw, 1):.3f}x)", flush=True)
+
         for step in range(start_step, args.steps):
             t0 = time.time()
             batch = pipeline.batch_at(step)
@@ -203,11 +268,17 @@ def main(argv=None):
             # would seed its EWMA from that and flag every real measurement
             jax.block_until_ready(metrics)
             dt = time.time() - t0
+            obs["loss"].set(float(metrics["loss"]))
+            obs["tps"].set(args.global_batch * args.seq_len / max(dt, 1e-9))
+            obs["step_s"].observe(dt)
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])
                 gn = float(metrics["grad_norm"])
                 print(f"step {step:5d} loss {loss:.4f} |g| {gn:.3f} "
                       f"{dt*1e3:.0f}ms", flush=True)
+                _emit_diag_norms(obs["diag"], state["params"])
+                if exporter is not None:
+                    exporter.export(step)
             # the first step's wall time is dominated by jit compilation —
             # seeding the EWMA with it would mask real stragglers for the
             # first dozens of steps (also after every resume/recompile)
@@ -227,6 +298,10 @@ def main(argv=None):
             # ``args.steps`` and a resumed job would think training is done.
             ckpt.wait()
             ckpt.save(args.steps, state, extra={"arch": args.arch})
+    if exporter is not None:
+        exporter.close()
+        print(f"[obs] metrics jsonl -> {args.metrics_jsonl} "
+              f"({exporter.exports} snapshots)", flush=True)
     print("done.")
 
 

@@ -216,6 +216,51 @@ Sampling (``sampler.py``) is shared between the fused decode step and the
 admission path: greedy, or temperature with top-k / top-p filtering.
 Decode ticks and admissions draw from disjoint chained ``fold_in``
 streams, so tick counters and request ids can never collide.
+
+Stats keys <-> registry metrics
+-------------------------------
+``Engine.stats`` keeps its historical flat-dict surface but is a
+:class:`repro.obs.metrics.StatsView` over a per-engine metric registry
+(``Engine(..., obs=Observability(...))``; the authoritative key->metric
+table is ``repro.serving.engine.STATS_METRICS``).  Every key below reads
+(and, except where noted, writes) the registry metric on the right:
+
+===================  ====================================  =============
+stats key            registry metric                       kind
+===================  ====================================  =============
+prefill_dispatches   serve_prefill_dispatches_total        counter
+decode_ticks         serve_decode_ticks_total              counter
+tokens_out           serve_tokens_out_total                counter
+finished             serve_finished_total                  counter
+preempted            serve_preempted_total                 counter
+requeued             serve_requeued_total                  counter
+timeout              serve_timeout_total                   counter
+rejected             serve_rejected_total                  counter
+deadline_preempts    serve_deadline_preempts_total         counter
+corrupt_ticks        serve_corrupt_ticks_total             counter
+stalled_slot_ticks   serve_stalled_slot_ticks_total        counter
+degrade_down         serve_degrade_down_total              counter
+degrade_up           serve_degrade_up_total                counter
+degrade_level        serve_degrade_level                   gauge
+prefill_s            serve_prefill_seconds_total           counter
+decode_s             serve_decode_seconds_total            counter
+drafted              serve_spec_drafted_total              counter
+accepted             serve_spec_accepted_total             counter
+acceptance_rate      serve_acceptance_rate                 derived gauge
+                                                           (READ-ONLY:
+                                                           accepted /
+                                                           drafted at
+                                                           read time)
+attn_gather_bytes    serve_attn_gather_bytes_total         counter
+attn_kernel_bytes    serve_attn_kernel_bytes_total         counter
+===================  ====================================  =============
+
+Latency histograms (``serve_ttft_seconds``, ``serve_tpot_seconds``,
+``serve_tick_seconds``) have no stats key — read them off the engine's
+registry (``obs.registry.get(name)``); the overload bench reports its
+percentiles from them.  The full metric glossary, including the
+process-global kernel/autotune/training names, lives in
+``repro/obs/__init__.py``.
 """
 
 from repro.dist.steps import (  # noqa: F401

@@ -39,6 +39,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import trace
+
 
 class BlockAllocator:
     """Fixed-size block pool with a global free list and per-slot tables.
@@ -228,8 +230,10 @@ class BlockAllocator:
                 f"table/held mismatch: stale maps "
                 f"{sorted(set(mapped) - self._held)}, leaked holds "
                 f"{sorted(self._held - set(mapped))}")
-        return {"free": len(free), "held": len(self._held),
-                "mapped": len(mapped)}
+        summary = {"free": len(free), "held": len(self._held),
+                   "mapped": len(mapped)}
+        trace.instant_global("allocator", "audit", **summary)
+        return summary
 
     # -- device view -------------------------------------------------------
 

@@ -87,11 +87,42 @@ import numpy as np
 
 from repro.dist import steps as steps_mod
 from repro.dist.elastic import StragglerMonitor
+from repro.obs import Observability
+from repro.obs.metrics import StatsView
 from repro.serving import sampler as sampler_mod
 from repro.serving.blocks import BlockAllocator
 from repro.serving.faults import FaultPlan
 from repro.serving.request import Request, RequestStatus
 from repro.serving.scheduler import Scheduler
+
+#: ``Engine.stats`` key -> (registry metric name, kind).  Kinds:
+#: ``counter`` (int-valued), ``seconds`` (float counter), ``gauge``,
+#: ``derived`` (computed at read/snapshot time — never stored, so it can
+#: never go stale).  The prose cross-reference lives in
+#: ``repro/serving/__init__.py``; the glossary in ``repro/obs/__init__``.
+STATS_METRICS = {
+    "prefill_dispatches": ("serve_prefill_dispatches_total", "counter"),
+    "decode_ticks": ("serve_decode_ticks_total", "counter"),
+    "tokens_out": ("serve_tokens_out_total", "counter"),
+    "finished": ("serve_finished_total", "counter"),
+    "preempted": ("serve_preempted_total", "counter"),
+    "requeued": ("serve_requeued_total", "counter"),
+    "timeout": ("serve_timeout_total", "counter"),
+    "rejected": ("serve_rejected_total", "counter"),
+    "deadline_preempts": ("serve_deadline_preempts_total", "counter"),
+    "corrupt_ticks": ("serve_corrupt_ticks_total", "counter"),
+    "stalled_slot_ticks": ("serve_stalled_slot_ticks_total", "counter"),
+    "degrade_level": ("serve_degrade_level", "gauge"),
+    "degrade_down": ("serve_degrade_down_total", "counter"),
+    "degrade_up": ("serve_degrade_up_total", "counter"),
+    "prefill_s": ("serve_prefill_seconds_total", "seconds"),
+    "decode_s": ("serve_decode_seconds_total", "seconds"),
+    "drafted": ("serve_spec_drafted_total", "counter"),
+    "accepted": ("serve_spec_accepted_total", "counter"),
+    "acceptance_rate": ("serve_acceptance_rate", "derived"),
+    "attn_gather_bytes": ("serve_attn_gather_bytes_total", "counter"),
+    "attn_kernel_bytes": ("serve_attn_kernel_bytes_total", "counter"),
+}
 
 
 class Engine:
@@ -119,6 +150,7 @@ class Engine:
         draft_skip_layers: int = 0,
         clock: Optional[Callable[[], float]] = None,
         fault: Optional[FaultPlan] = None,
+        obs: Optional[Observability] = None,
         deadline_margin_s: float = 0.05,
         queue_bound: Optional[int] = None,
         degrade_down_after: int = 3,
@@ -141,6 +173,11 @@ class Engine:
         self.max_prompt_len = max_prompt_len or max_len // 2
         self.paged = paged
         self._clock = clock if clock is not None else time.time
+        # duration source: wall time by default, the INJECTED clock when
+        # one is supplied — a virtual-clock chaos run then produces fully
+        # deterministic tick/prefill/decode timings, which is what makes
+        # trace and snapshot replays byte-identical (tests/test_obs.py)
+        self._timer = clock if clock is not None else time.perf_counter
         self._fault = fault
         self.deadline_margin_s = deadline_margin_s
         self.queue_bound = queue_bound if queue_bound is not None \
@@ -212,15 +249,27 @@ class Engine:
         self._sample = jax.jit(functools.partial(
             sampler_mod.sample, method=sample, temperature=temperature,
             top_k=top_k, top_p=top_p))
-        self.stats = {"prefill_dispatches": 0, "decode_ticks": 0,
-                      "tokens_out": 0, "finished": 0, "preempted": 0,
-                      "requeued": 0, "timeout": 0, "rejected": 0,
-                      "deadline_preempts": 0, "corrupt_ticks": 0,
-                      "stalled_slot_ticks": 0,
-                      "degrade_level": 0, "degrade_down": 0, "degrade_up": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0,
-                      "drafted": 0, "accepted": 0, "acceptance_rate": 0.0,
-                      "attn_gather_bytes": 0, "attn_kernel_bytes": 0}
+        # observability: the registry is ALWAYS live (it backs the
+        # back-compat ``stats`` view); tracing / export / profiling are
+        # optional surfaces, each a single None-check when off — the
+        # documented noop path (see repro/obs/__init__.py).  An
+        # Observability bundle must not be shared between engines: the
+        # get-or-create registry would silently merge their stats.
+        self.obs = obs if obs is not None else Observability.off()
+        self._tracer = self.obs.tracer
+        if self._tracer is not None and self._tracer.clock is None:
+            self._tracer.clock = self._clock  # adopt the engine clock
+        self._obs_tick = self.obs.tick_hook()
+        self._prof = self.obs.prof
+        self.stats = self._build_stats()
+        reg = self.obs.registry
+        self._h_ttft = reg.histogram(
+            "serve_ttft_seconds", "submit -> first token latency")
+        self._h_tpot = reg.histogram(
+            "serve_tpot_seconds",
+            "per-output-token decode latency: (t_finish - ttft)/(n-1)")
+        self._h_tick = reg.histogram(
+            "serve_tick_seconds", "engine tick wall latency")
         self.wall_clock_exceeded = False
         # preempted requests wait out an exponential backoff (in ticks)
         # before re-entering the queue: (eligible_tick, request)
@@ -270,6 +319,36 @@ class Engine:
                                           adapt_after=5)
 
     # -- accounting --------------------------------------------------------
+
+    def _build_stats(self) -> StatsView:
+        """Bind every historical ``stats`` key to its registry metric
+        (table: ``STATS_METRICS``).  ``acceptance_rate`` is DERIVED —
+        computed from the drafted/accepted counters at read time — which
+        fixes the seed's staleness bug: the stored ratio was only
+        refreshed inside the spec tick while ``drafted`` grew, so a run
+        degraded to ``spec_off`` kept reporting its pre-degradation
+        value forever."""
+        reg = self.obs.registry
+        view = StatsView()
+        for key, (name, kind) in STATS_METRICS.items():
+            if kind == "counter":
+                m = reg.counter(name)
+                view.bind(key, lambda m=m: int(m.value), m.set)
+            elif kind == "seconds":
+                m = reg.counter(name)
+                view.bind(key, lambda m=m: float(m.value), m.set)
+            elif kind == "gauge":
+                m = reg.gauge(name)
+                view.bind(key, lambda m=m: int(m.value), m.set)
+        drafted = reg.counter(STATS_METRICS["drafted"][0])
+        accepted = reg.counter(STATS_METRICS["accepted"][0])
+        rate = reg.derived_gauge(
+            STATS_METRICS["acceptance_rate"][0],
+            lambda: (accepted.value / drafted.value) if drafted.value
+            else 0.0,
+            "accepted/drafted, computed at snapshot time (never stale)")
+        view.bind("acceptance_rate", rate)
+        return view
 
     @property
     def cache_bytes(self) -> int:
@@ -342,6 +421,9 @@ class Engine:
                 f"frontend_embeds")
         now = self._clock()
         request.t_submit = now
+        tr = self._tracer
+        if tr is not None:
+            tr.req_phase(request.rid, "queued")
         # degradation ladder, last rung: the admission queue is bounded
         # and the lowest-priority request (newest on ties) is shed
         if (self._levels[self._level] == "shed"
@@ -357,6 +439,9 @@ class Engine:
             victim.t_finish = now
             self.stats["rejected"] += 1
             self.stats["finished"] += 1
+            if tr is not None:
+                tr.req_terminal(victim.rid, "rejected",
+                                shed_for=request.rid)
             if victim is request:
                 return
         self.scheduler.submit(request)
@@ -372,6 +457,8 @@ class Engine:
                          if t > self._tick_no]
         for req in ready:
             self.scheduler.submit(req)
+            if self._tracer is not None:
+                self._tracer.req_phase(req.rid, "queued", requeue=True)
 
     def _admit_pass(self) -> None:
         if self.paged:
@@ -401,15 +488,22 @@ class Engine:
         #active slots advanced."""
         tick_no = self._tick_no
         self._tick_no += 1
+        if self._obs_tick is not None:    # exporter cadence + profile
+            self._obs_tick(tick_no)       # window; None when neither set
         self._expire_deadlines(self._clock())
-        t0 = time.perf_counter()
+        t0 = self._timer()
         if self.spec_k_eff:
             n = self._tick_spec(tick_no)
         else:
             n = self._tick_decode(tick_no)
-        dt = time.perf_counter() - t0
+        dt = self._timer() - t0
         if self._fault is not None:
-            dt += self._fault.extra_tick_s(tick_no)
+            extra = self._fault.extra_tick_s(tick_no)
+            if extra and self._tracer is not None:
+                self._tracer.instant("engine", "fault:slow_tick",
+                                     tick=tick_no, extra_s=extra)
+            dt += extra
+        self._h_tick.observe(dt)
         self._observe_pressure(dt, tick_no)
         return n
 
@@ -418,21 +512,23 @@ class Engine:
         active = self.scheduler.active()
         if active:
             rng = self._decode_rng(self.stats["decode_ticks"])
-            t0 = time.perf_counter()
-            if self.paged:
-                pos = self._positions.copy()
-                for slot in self._stalled:
-                    pos[slot] = self._park  # no write, no token this tick
-                self._attn_bytes_tick(pos)
-                tok, self._cache = self._decode(
-                    self.params, self._cache, jnp.asarray(self._tokens),
-                    jnp.asarray(pos), jnp.asarray(self.allocator.table), rng)
-            else:
-                tok, self._cache = self._decode(
-                    self.params, self._cache, jnp.asarray(self._tokens),
-                    jnp.asarray(self._positions), rng)
-            tok_np = np.asarray(tok)
-            self.stats["decode_s"] += time.perf_counter() - t0
+            t0 = self._timer()
+            with self._prof.annotate("decode"):
+                if self.paged:
+                    pos = self._positions.copy()
+                    for slot in self._stalled:
+                        pos[slot] = self._park  # no write/token this tick
+                    self._attn_bytes_tick(pos)
+                    tok, self._cache = self._decode(
+                        self.params, self._cache, jnp.asarray(self._tokens),
+                        jnp.asarray(pos), jnp.asarray(self.allocator.table),
+                        rng)
+                else:
+                    tok, self._cache = self._decode(
+                        self.params, self._cache, jnp.asarray(self._tokens),
+                        jnp.asarray(self._positions), rng)
+                tok_np = np.asarray(tok)
+            self.stats["decode_s"] += self._timer() - t0
             self.stats["decode_ticks"] += 1
             self.stats["stalled_slot_ticks"] += len(self._stalled)
             if self._fault is not None and self._fault.logits_corrupt(
@@ -440,6 +536,9 @@ class Engine:
                 # simulated NaN/inf logits: every sampled id is garbage
                 tok_np = np.full_like(tok_np, -1)
                 self.stats["corrupt_ticks"] += 1
+                if self._tracer is not None:
+                    self._tracer.instant("engine", "fault:corrupt_logits",
+                                         tick=tick_no)
             now = self._clock()
             for slot, req in active:
                 if slot in self._stalled:
@@ -474,30 +573,35 @@ class Engine:
         if self.paged:
             self._attn_bytes_tick(pos)
 
-        t0 = time.perf_counter()
-        drafts, draft_logits = self.draft.propose(self._tokens, pos,
-                                                  draft_rng)
+        t0 = self._timer()
+        with self._prof.annotate("draft"):
+            drafts, draft_logits = self.draft.propose(self._tokens, pos,
+                                                      draft_rng)
         tok_mat = np.concatenate([self._tokens[:, None], drafts],
                                  axis=1).astype(np.int32)
-        if self.paged:
-            acc, out, self._cache = self._verify(
-                self.params, self._cache, jnp.asarray(tok_mat),
-                jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
-                jnp.asarray(self.allocator.table), verify_rng)
-        else:
-            acc, out, self._cache = self._verify(
-                self.params, self._cache, jnp.asarray(tok_mat),
-                jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
-                verify_rng)
-        acc_np = np.asarray(acc)
-        out_np = np.asarray(out)
-        self.stats["decode_s"] += time.perf_counter() - t0
+        with self._prof.annotate("verify"):
+            if self.paged:
+                acc, out, self._cache = self._verify(
+                    self.params, self._cache, jnp.asarray(tok_mat),
+                    jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
+                    jnp.asarray(self.allocator.table), verify_rng)
+            else:
+                acc, out, self._cache = self._verify(
+                    self.params, self._cache, jnp.asarray(tok_mat),
+                    jnp.asarray(drafts), draft_logits, jnp.asarray(pos),
+                    verify_rng)
+            acc_np = np.asarray(acc)
+            out_np = np.asarray(out)
+        self.stats["decode_s"] += self._timer() - t0
         self.stats["decode_ticks"] += 1
         self.stats["stalled_slot_ticks"] += len(self._stalled)
         corrupt = (self._fault is not None
                    and self._fault.logits_corrupt(tick_no))
         if corrupt:
             self.stats["corrupt_ticks"] += 1
+            if self._tracer is not None:
+                self._tracer.instant("engine", "fault:corrupt_logits",
+                                     tick=tick_no)
 
         now = self._clock()
         n_adv = np.zeros((self.n_slots,), np.int32)
@@ -529,9 +633,8 @@ class Engine:
                 self._maybe_finish(slot, req, t, now)
                 if req.done:
                     break
-        if self.stats["drafted"]:
-            self.stats["acceptance_rate"] = (self.stats["accepted"]
-                                             / self.stats["drafted"])
+        # (acceptance_rate needs no update here: it is a derived gauge
+        # over the drafted/accepted counters, computed at read time)
         self.draft.commit(n_adv)
         if self.paged:
             # rollback: return verify-window pages beyond each surviving
@@ -590,6 +693,8 @@ class Engine:
             req.t_finish = now
             self.stats["timeout"] += 1
             self.stats["finished"] += 1
+            if self._tracer is not None:
+                self._tracer.req_terminal(req.rid, "timeout", queued=True)
         for slot, req in self.scheduler.active():
             if now >= req.deadline_abs():
                 self.stats["timeout"] += 1
@@ -624,6 +729,10 @@ class Engine:
         self.stats["requeued"] += 1
         backoff = 1 << min(req.n_preemptions - 1, 6)
         self._backoff.append((self._tick_no + backoff, req))
+        if self._tracer is not None:
+            self._tracer.req_instant(req.rid, "preempt", slot=slot,
+                                     n_preemptions=req.n_preemptions)
+            self._tracer.req_phase(req.rid, "backoff", ticks=backoff)
 
     def preempt(self, slot: int) -> None:
         """Public preempt-and-requeue of the request in ``slot`` — the
@@ -669,6 +778,9 @@ class Engine:
                             self.allocator.blocks_held(sr[0])
                             if self.paged else 0))
         self.stats["deadline_preempts"] += 1
+        if self._tracer is not None:
+            self._tracer.instant("engine", "deadline_preempt",
+                                 victim=req.rid, starving=starving.rid)
         self._preempt(slot, req)
         return True
 
@@ -684,6 +796,9 @@ class Engine:
         step the ladder down after ``degrade_down_after`` consecutive hot
         ticks, back up after ``degrade_up_after`` consecutive calm ones."""
         straggler = self._watchdog.observe(tick_no, dt)
+        if straggler and self._tracer is not None:
+            self._tracer.instant("engine", "straggler", tick=tick_no,
+                                 dt_s=dt)
         pool_dry = (self.paged and bool(self._stalled)
                     and self.allocator.n_free == 0)
         queue_over = len(self.scheduler.queue) > self.queue_bound
@@ -711,6 +826,11 @@ class Engine:
             self.stats["degrade_down"] += 1
         else:
             self.stats["degrade_up"] += 1
+        if self._tracer is not None:
+            self._tracer.instant(
+                "engine", "ladder",
+                src=self._levels[self._level], dst=self._levels[level],
+                direction="down" if level > self._level else "up")
         self._level = level
         self.stats["degrade_level"] = level
         name = self._levels[level]
@@ -738,30 +858,39 @@ class Engine:
         toks[0, :clen] = np.asarray(ctx, np.int32)
         lengths = jnp.asarray([clen], jnp.int32)
         fe = getattr(req, "frontend_embeds", None)
-        t0 = time.perf_counter()
-        if self.paged:
-            self.allocator.alloc_slot(slot, clen)
-            last_logits, self._cache = self._prefill(
-                self.params, self._cache, self._slot_template,
-                jnp.asarray(toks), lengths,
-                jnp.asarray(self.allocator.phys_row(slot)),
-                jnp.int32(slot), fe)
-        else:
-            last_logits, slot_cache = self._prefill(
-                self.params, self._slot_template, jnp.asarray(toks), lengths,
-                fe)
-            self._cache = self._insert(self._cache, slot_cache,
-                                       jnp.int32(slot))
-        tok = int(self._sample(self._admit_rng(req.rid), last_logits)[0])
-        if self.draft is not None:
-            # the draft mirrors the slot layout: its own (cheap) prefill
-            # fills its cache row so drafting starts from the same prompt
-            self.draft.prefill(slot, jnp.asarray(toks), lengths, fe)
-        self.stats["prefill_s"] += time.perf_counter() - t0
+        if self._tracer is not None:
+            self._tracer.req_phase(req.rid, "prefill", slot=slot,
+                                   ctx_len=clen)
+        t0 = self._timer()
+        with self._prof.annotate("prefill"):
+            if self.paged:
+                self.allocator.alloc_slot(slot, clen)
+                last_logits, self._cache = self._prefill(
+                    self.params, self._cache, self._slot_template,
+                    jnp.asarray(toks), lengths,
+                    jnp.asarray(self.allocator.phys_row(slot)),
+                    jnp.int32(slot), fe)
+            else:
+                last_logits, slot_cache = self._prefill(
+                    self.params, self._slot_template, jnp.asarray(toks),
+                    lengths, fe)
+                self._cache = self._insert(self._cache, slot_cache,
+                                           jnp.int32(slot))
+            tok = int(self._sample(self._admit_rng(req.rid), last_logits)[0])
+            if self.draft is not None:
+                # the draft mirrors the slot layout: its own (cheap)
+                # prefill fills its cache row so drafting starts from the
+                # same prompt
+                self.draft.prefill(slot, jnp.asarray(toks), lengths, fe)
+        self.stats["prefill_s"] += self._timer() - t0
         self.stats["prefill_dispatches"] += 1
         now = self._clock()
         if req.t_first_token is None:       # readmissions keep the mark
             req.t_first_token = now
+            if req.t_submit is not None:
+                self._h_ttft.observe(now - req.t_submit)
+        if self._tracer is not None:
+            self._tracer.req_phase(req.rid, "decode", slot=slot)
         req.generated.append(tok)
         self.stats["tokens_out"] += 1
         self._tokens[slot] = tok
@@ -780,6 +909,9 @@ class Engine:
         for slot, _ in active:
             forced = (self._fault is not None
                       and self._fault.spurious_stall(slot))
+            if forced and self._tracer is not None:
+                self._tracer.instant("engine", "fault:spurious_stall",
+                                     slot=slot)
             if forced or not self.allocator.ensure_range(
                     slot, int(self._positions[slot]), need):
                 self._stalled.add(slot)
@@ -825,3 +957,9 @@ class Engine:
             self.allocator.free_slot(slot)
         self._positions[slot] = self._park      # park: no cache writes
         self.stats["finished"] += 1
+        n = len(req.generated)
+        if req.t_first_token is not None and n > 1:
+            self._h_tpot.observe(
+                max(now - req.t_first_token, 0.0) / (n - 1))
+        if self._tracer is not None:
+            self._tracer.req_terminal(req.rid, reason, tokens=n)
